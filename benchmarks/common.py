@@ -1,0 +1,34 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "paper"
+
+
+def save(name: str, payload: dict):
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=2))
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def csv_line(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def stats(xs) -> dict:
+    xs = np.asarray(xs, np.float64)
+    return {"mean": float(xs.mean()), "std": float(xs.std()), "n": int(xs.size)}

@@ -1,0 +1,64 @@
+"""Paper Fig. 2 — how many frequencies does CKM need?
+
+Claim: relative SSE (CKM / kmeans) drops below 2 at m/(Kn) ~ 5, roughly
+independent of n and K.  We sweep m/(Kn) for (K=10, n=10), plus shorter
+sweeps varying n and K, and report the smallest ratio where relSSE < 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, save, timed
+from repro.core import ckm as ckm_mod
+from repro.core import lloyd as lloyd_mod
+from repro.data import synthetic
+
+RATIOS = (1, 2, 3, 5, 8, 12)
+
+
+def _rel_sse(key, n_points, k, n, ratio, trials):
+    rels = []
+    for t in range(trials):
+        kd, kc, kl = jax.random.split(jax.random.PRNGKey(key + 31 * t), 3)
+        x = synthetic.gaussian_mixture(kd, n_points, k, n)
+        lres = lloyd_mod.kmeans(
+            kl, x, lloyd_mod.LloydConfig(k=k, replicates=3, init="range")
+        )
+        cfg = ckm_mod.CKMConfig(k=k, m=max(int(ratio * k * n), 8))
+        res = ckm_mod.fit(kc, x, cfg)
+        rels.append(float(ckm_mod.sse(x, res.centroids)) / float(lres.sse))
+    return float(np.mean(rels))
+
+
+def run(full: bool = False):
+    n_points = 100_000 if full else 20_000
+    trials = 5 if full else 3
+    results: dict = {"n_points": n_points, "trials": trials, "sweeps": {}}
+    sweeps = [("K10_n10", 10, 10)]
+    if full:
+        sweeps += [("K10_n4", 10, 4), ("K10_n20", 10, 20), ("K5_n10", 5, 10),
+                   ("K20_n10", 20, 10)]
+    else:
+        sweeps += [("K5_n10", 5, 10), ("K10_n4", 10, 4)]
+    for name, k, n in sweeps:
+        curve = {}
+        for ratio in RATIOS:
+            (rel), dt = timed(_rel_sse, 17, n_points, k, n, ratio, trials)
+            curve[ratio] = rel
+            csv_line(f"fig2_{name}_r{ratio}", dt, f"relSSE={rel:.3f}")
+        crossing = next((r for r in RATIOS if curve[r] < 2.0), None)
+        results["sweeps"][name] = {"curve": curve, "first_ratio_below_2": crossing}
+    # Paper claim: the relSSE<2 crossing sits at m/(Kn) <= 5 for the paper's
+    # regime (n >= 10 shows it cleanly; low n deviates, as the paper notes).
+    main = results["sweeps"]["K10_n10"]["first_ratio_below_2"]
+    results["claim_crossing_at_or_below_5"] = bool(main is not None and main <= 5)
+    save("fig2_frequencies", results)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

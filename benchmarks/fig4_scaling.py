@@ -1,0 +1,78 @@
+"""Paper Fig. 4 — time/memory of CKM vs kmeans as N grows.
+
+Claims: given the sketch, CKM's decode time and working memory are
+INDEPENDENT of N; kmeans' grow linearly; at the paper's largest N, one CKM
+run beats kmeans x5 by ~two orders of magnitude.  Container scale: N up to
+1e6 (paper: 1e7) — the N-independence claim is the scale-free one.
+
+Memory is reported analytically (bytes actually required by each algorithm's
+working set: the sketch + frequencies vs the full dataset), matching the
+paper's "relative memory" panel.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, save, timed
+from repro.core import ckm as ckm_mod
+from repro.core import lloyd as lloyd_mod
+from repro.data import synthetic
+
+
+def run(full: bool = False):
+    k, n, m = 10, 10, 1000
+    sizes = (10_000, 100_000, 1_000_000) if full else (10_000, 100_000, 300_000)
+    results: dict = {"sizes": list(sizes), "k": k, "n": n, "m": m}
+    cfg = ckm_mod.CKMConfig(k=k, m=m)
+    for n_points in sizes:
+        kd, kc, kl = jax.random.split(jax.random.PRNGKey(5), 3)
+        x = synthetic.gaussian_mixture(kd, n_points, k, n)
+        # sketch (one pass over X)
+        (z_pack), t_sketch = timed(ckm_mod.compute_sketch, kc, x, cfg)
+        z, w, s2, (lo, hi) = z_pack
+        # CKM decode: data-independent
+        (_dec), t_decode = timed(
+            ckm_mod.decode_sketch, jax.random.PRNGKey(6), z, w, lo, hi, cfg
+        )
+        cents, _, _ = _dec
+        sse_ckm = float(ckm_mod.sse(x, cents))
+        # kmeans x1 and x5
+        (l1), t_km1 = timed(
+            lloyd_mod.kmeans, kl, x, lloyd_mod.LloydConfig(k=k, init="range")
+        )
+        (l5), t_km5 = timed(
+            lloyd_mod.kmeans, kl, x,
+            lloyd_mod.LloydConfig(k=k, replicates=5, init="range"),
+        )
+        mem_ckm = (2 * m + n * m + 4 * n) * 4  # sketch + freqs + bounds (B)
+        mem_km = n_points * n * 4  # kmeans must hold the dataset
+        results[str(n_points)] = {
+            "t_sketch": t_sketch, "t_ckm_decode": t_decode,
+            "t_km1": t_km1, "t_km5": t_km5,
+            "rel_sse_vs_km5": sse_ckm / float(l5.sse),
+            "mem_ckm_bytes": mem_ckm, "mem_km_bytes": mem_km,
+        }
+        csv_line(
+            f"fig4_N{n_points}", t_decode,
+            f"decode={t_decode:.2f}s;km5={t_km5:.2f}s;"
+            f"speedup_vs_km5={t_km5/t_decode:.1f}x;"
+            f"mem_ratio={mem_km/mem_ckm:.1f}x",
+        )
+    t0 = results[str(sizes[0])]["t_ckm_decode"]
+    t1 = results[str(sizes[-1])]["t_ckm_decode"]
+    results["claim_decode_time_n_independent"] = bool(t1 < 2.0 * t0)
+    results["claim_faster_than_km5_at_largest_n"] = bool(
+        results[str(sizes[-1])]["t_km5"] > results[str(sizes[-1])]["t_ckm_decode"]
+    )
+    save("fig4_scaling", results)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

@@ -1,0 +1,84 @@
+"""Kernel microbenchmarks: fused Pallas fourier_sketch / assign_argmin.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness),
+so wall-clock speedups are NOT meaningful; what we report per kernel is
+- interpret-mode equivalence error vs the jnp oracle, and
+- the HBM-traffic model: bytes moved by the unfused jnp path (projection
+  matrix materialised) vs the fused kernel (inputs+outputs only), which is
+  the quantity the TPU roofline converts into time.
+Also times the jnp fallback paths (the actual CPU execution path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, save, timed
+from repro.kernels import ops, ref
+
+
+def run(full: bool = False):
+    results = {}
+    shapes = [(4096, 16, 1024), (16384, 10, 1000)] if not full else [
+        (4096, 16, 1024), (65536, 10, 1000), (262144, 16, 2048)]
+    for n_pts, feat, m in shapes:
+        key = jax.random.PRNGKey(0)
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (n_pts, feat))
+        w = jax.random.normal(kw, (feat, m))
+        beta = jnp.full((n_pts,), 1.0 / n_pts)
+        # interpret-mode equivalence on a slice (full interpret is slow)
+        sl = slice(0, min(n_pts, 2048))
+        zk = ops.fourier_sketch(x[sl], w, beta[sl] * (n_pts / 2048),
+                                interpret=True, block_n=256, block_m=256)
+        ck, sk_ = ref.fourier_sketch_ref(x[sl], w, beta[sl] * (n_pts / 2048))
+        err = float(jnp.max(jnp.abs(zk - jnp.concatenate([ck, -sk_]))))
+        # jnp (unfused) wall time — the real CPU path
+        f = jax.jit(lambda x, w, b: ref.fourier_sketch_ref(x, w, b))
+        _, t_ref = timed(f, x, w, beta)
+        _, t_ref = timed(f, x, w, beta)  # warm
+        # traffic model (f32): unfused writes+reads the (N, m) projection 3x
+        unfused = 4 * (n_pts * feat + feat * m + 3 * n_pts * m + 2 * m)
+        fused = 4 * (n_pts * feat + feat * m + 2 * m)
+        name = f"sketch_N{n_pts}_n{feat}_m{m}"
+        results[name] = {
+            "interpret_max_err": err,
+            "jnp_seconds": t_ref,
+            "bytes_unfused": unfused,
+            "bytes_fused": fused,
+            "traffic_reduction": unfused / fused,
+        }
+        csv_line(name, t_ref, f"err={err:.2e};traffic_x{unfused/fused:.1f}")
+        assert err < 1e-3
+    # assign_argmin
+    for n_pts, feat, k in [(16384, 16, 64), (65536, 10, 10)]:
+        kx, kc = jax.random.split(jax.random.PRNGKey(1))
+        x = jax.random.normal(kx, (n_pts, feat))
+        c = jax.random.normal(kc, (k, feat))
+        sl = slice(0, 2048)
+        ik, dk = ops.assign_argmin(x[sl], c, interpret=True, block_n=256)
+        ir, dr = ref.assign_argmin_ref(x[sl], c)
+        agree = float(jnp.mean((ik == ir).astype(jnp.float32)))
+        f = jax.jit(lambda x, c: ref.assign_argmin_ref(x, c))
+        _, t_ref = timed(f, x, c)
+        _, t_ref = timed(f, x, c)
+        unfused = 4 * (n_pts * feat + k * feat + 2 * n_pts * k + 2 * n_pts)
+        fused = 4 * (n_pts * feat + k * feat + 2 * n_pts)
+        name = f"assign_N{n_pts}_n{feat}_K{k}"
+        results[name] = {
+            "interpret_agreement": agree,
+            "jnp_seconds": t_ref,
+            "traffic_reduction": unfused / fused,
+        }
+        csv_line(name, t_ref, f"agree={agree:.4f};traffic_x{unfused/fused:.1f}")
+        assert agree == 1.0
+    save("kernels", results)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(full="--full" in sys.argv)

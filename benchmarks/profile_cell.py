@@ -1,0 +1,76 @@
+"""Per-shape HBM byte breakdown for a dry-run cell (hillclimb profiler)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, math, collections, dataclasses
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.utils import hlo
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+overrides = dict(kv.split("=", 1) for kv in sys.argv[3:])
+cfg = get_config(arch)
+if overrides:
+    cfg = dataclasses.replace(cfg, **overrides)
+shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+
+if shape.kind == "train":
+    from repro.launch.train import jit_train_step
+    from repro.launch.specs import train_batch_specs
+
+    jitted, shapes, *_ = jit_train_step(cfg, shape, mesh)
+    compiled = jitted.lower(shapes, train_batch_specs(cfg, shape)).compile()
+elif shape.kind == "prefill":
+    from repro.launch.serve import jit_prefill
+
+    jitted, (ps, bs) = jit_prefill(cfg, shape, mesh)
+    compiled = jitted.lower(ps, bs).compile()
+else:
+    from repro.launch.serve import jit_serve_step
+
+    jitted, (ps, tok, cs, idx) = jit_serve_step(cfg, shape, mesh)
+    compiled = jitted.lower(ps, tok, cs, idx).compile()
+
+text = compiled.as_text()
+comps, entry = hlo._parse_computations(text)
+
+# exact recursive walk mirroring hlo._cost_computation but attributing bytes
+agg = collections.Counter()
+
+def walk(name, mult):
+    instrs, types, producers, consumers = hlo._parse_instrs(comps.get(name, ()))
+    for m in instrs:
+        op = m.group("op")
+        iname = m.group("name")
+        out = m.group("out")
+        rest = m.group("rest")
+        ops_n = hlo._OPERAND_NAME_RE.findall(m.group("operands"))
+        if op in hlo._COLLECTIVE_DONE or op in hlo._BOOKKEEPING:
+            continue
+        if op in hlo._COLLECTIVES:
+            continue
+        if op == "while":
+            tm = hlo._TRIP_RE.search(rest)
+            t = int(tm.group(1)) if tm else 1
+            cm = re.search(r"body=%?([\w\.\-]+)", rest)
+            if cm:
+                walk(cm.group(1), mult * t)
+            continue
+        if op == "conditional":
+            continue
+        if hlo._is_convert(iname, producers):
+            continue
+        b = sum(hlo._effective_bytes(n, types, producers) for n in ops_n)
+        if op == "dot":
+            b += hlo._result_effective_bytes(iname, types, producers, consumers)
+        else:
+            b += hlo._shape_bytes(out)
+        agg[(op, out[:52])] += b * mult
+
+walk(entry, 1)
+tot = sum(agg.values())
+print(f"total {tot:.3e} bytes/device")
+for (op, shp), b in agg.most_common(18):
+    print(f"{b/2**40:9.3f} TiB {100*b/tot:5.1f}%  {op:9s} {shp}")

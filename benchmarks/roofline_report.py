@@ -1,0 +1,89 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+Prints markdown; also writes experiments/roofline_table.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "experiments" / "dryrun"
+
+ARCH_ORDER = [
+    "internvl2-26b", "mistral-large-123b", "gemma3-1b", "smollm-360m",
+    "llama3.2-1b", "kimi-k2-1t-a32b", "granite-moe-1b-a400m", "xlstm-125m",
+    "whisper-small", "jamba-v0.1-52b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        rows.append(json.loads(p.read_text()))
+    key = lambda r: (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]))
+    return sorted(rows, key=key)
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (
+            f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | — |"
+        )
+    if r["status"] == "error":
+        return f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |"
+    mem = r.get("memory_analysis", {})
+    tot_gb = (
+        (mem.get("argument_size", 0) + mem.get("temp_size", 0)) / 2**30
+        if isinstance(mem, dict)
+        else float("nan")
+    )
+    return (
+        f"| {r['arch']} | {r['shape']} | {tot_gb:.1f} | "
+        f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+        f"{r['collective_s']*1e3:.1f} | {r['dominant']} | "
+        f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mem GB/chip | compute ms | memory ms | collective ms |"
+    " bound | useful | roofline frac |\n"
+    "|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, help="16x16 or 2x16x16; default both")
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["16x16", "16x16__opt", "2x16x16"]
+    out = []
+    for mesh in meshes:
+        rows = load(mesh)
+        if not rows:
+            continue
+        chips = "512" if mesh.startswith("2x") else "256"
+        label = mesh + (" (optimized: score_dtype=bf16)" if mesh.endswith("__opt") else "")
+        out.append(f"\n### Mesh {label} ({chips} chips)\n")
+        out.append(HEADER)
+        for r in rows:
+            out.append(fmt_row(r))
+        ok = [r for r in rows if r["status"] == "ok"]
+        out.append(
+            f"\n{len(ok)} compiled, "
+            f"{sum(1 for r in rows if r['status']=='skipped')} skipped "
+            f"(long_500k on pure full-attention archs, per DESIGN.md §4), "
+            f"{sum(1 for r in rows if r['status']=='error')} errors."
+        )
+    text = "\n".join(out)
+    print(text)
+    (ROOT / "experiments" / "roofline_table.md").write_text(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: compressive K-means in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ckm, lloyd
+from repro.data import synthetic
+
+key = jax.random.PRNGKey(0)
+k_data, k_ckm, k_km = jax.random.split(key, 3)
+
+# 50k points from 8 separated Gaussian clusters in R^6.
+x, labels, means = synthetic.gaussian_mixture(
+    k_data, 50_000, k=8, n=6, c=4.0, return_labels=True
+)
+
+# Compressive K-means: sketch once (one pass, m = 10*K*n numbers), then
+# decode centroids from the sketch alone — the data could now be discarded.
+cfg = ckm.CKMConfig(k=8)
+result = ckm.fit(k_ckm, x, cfg)
+print(f"sketch size m = {cfg.sketch_size(6)} (vs {x.size} dataset scalars)")
+print(f"CKM    SSE/N = {float(ckm.sse(x, result.centroids)) / x.shape[0]:.4f}")
+
+# Baseline: Lloyd-Max with 5 replicates (needs the full dataset every pass).
+base = lloyd.kmeans(k_km, x, lloyd.LloydConfig(k=8, replicates=5, init="kpp"))
+print(f"Lloyd5 SSE/N = {float(base.sse) / x.shape[0]:.4f}")
+print(f"mixture weights alpha: {[f'{w:.3f}' for w in result.weights]}")

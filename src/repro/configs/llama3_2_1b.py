@@ -1,0 +1,40 @@
+"""llama3.2-1b [dense] small llama3 [hf:meta-llama/Llama-3.2-1B].
+
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b",
+        family="dense",
+        n_layers=16,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=128256,
+        tie_embeddings=True,
+        rope_theta=5e5,
+        long_context="skip",  # pure full attention
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-1b-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        tie_embeddings=True,
+        q_block=32,
+        scan_chunk=16,
+    )

@@ -1,0 +1,171 @@
+"""Compressive K-means — the user-facing API (paper §3.3).
+
+The pipeline is exactly the paper's four steps:
+
+1. choose a frequency scale sigma^2 on a small fraction of the data
+   (``frequencies.estimate_sigma2``),
+2. draw ``m`` frequencies i.i.d. from the adapted-radius distribution,
+3. compute the sketch ``z = Sk(X, 1/N)`` (one pass; distributed/streaming via
+   ``core.distributed_sketch``) together with the box bounds ``l, u``,
+4. decode K centroids from the sketch with CLOMPR (``core.clompr``).
+
+Replicates are ``vmap``-ed over PRNG keys and selected by the value of the
+sketch-domain cost (4) — the SSE is *not* available once data is discarded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frequencies as freq_mod
+from repro.core import sketch as sk
+from repro.core.clompr import CLOMPRConfig, clompr
+
+
+@dataclasses.dataclass(frozen=True)
+class CKMConfig:
+    k: int
+    m: int | None = None  # sketch size; default m = 10*K*n (paper Fig. 1 uses
+    # m = 1000 at K = n = 10; Fig. 2 shows relSSE hits 2.0 already at 5*K*n)
+    freq_dist: freq_mod.FreqDist = "adapted_radius"
+    replicates: int = 1
+    sigma2: float | None = None  # None -> estimate from a data fraction
+    sigma2_sample: int = 2048
+    init: str = "range"
+    atom_steps: int = 300
+    joint_steps: int = 200
+    nnls_iters: int = 150
+    atom_lr: float = 0.05
+    joint_lr: float = 0.02
+    atom_restarts: int = 1
+    final_steps: int = 1000
+    merge_radius_scale: float = 2.5
+    sketch_chunk: int = 8192
+
+    def sketch_size(self, n: int) -> int:
+        return self.m if self.m is not None else 10 * self.k * n
+
+    def clompr_config(self) -> CLOMPRConfig:
+        return CLOMPRConfig(
+            k=self.k,
+            atom_steps=self.atom_steps,
+            joint_steps=self.joint_steps,
+            nnls_iters=self.nnls_iters,
+            atom_lr=self.atom_lr,
+            joint_lr=self.joint_lr,
+            init=self.init,  # type: ignore[arg-type]
+            atom_restarts=self.atom_restarts,
+            final_steps=self.final_steps,
+            merge_radius_scale=self.merge_radius_scale,
+        )
+
+
+class CKMResult(NamedTuple):
+    centroids: jax.Array  # (K, n)
+    weights: jax.Array  # (K,) — mixture weights alpha, sum to 1
+    cost: jax.Array  # sketch-domain objective (4) of the selected replicate
+    sigma2: jax.Array
+    frequencies: jax.Array  # (n, m)
+    sketch: jax.Array  # stacked-real (2m,)
+    bounds: tuple[jax.Array, jax.Array]
+
+
+def compute_sketch(
+    key: jax.Array, x: jax.Array, cfg: CKMConfig
+) -> tuple[jax.Array, jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
+    """Steps 1–3: scale estimation, frequency draw, one-pass sketch + bounds."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[1]
+    k_sig, k_freq = jax.random.split(key)
+    if cfg.sigma2 is None:
+        take = min(cfg.sigma2_sample, x.shape[0])
+        sigma2 = freq_mod.estimate_sigma2(k_sig, x[:take])
+    else:
+        sigma2 = jnp.asarray(cfg.sigma2, jnp.float32)
+    w = freq_mod.draw_frequencies(k_freq, cfg.sketch_size(n), n, sigma2, cfg.freq_dist)
+    z = sk.sketch(x, w, chunk=cfg.sketch_chunk)
+    bounds = sk.data_bounds(x)
+    return z, w, sigma2, bounds
+
+
+def decode_sketch(
+    key: jax.Array,
+    z: jax.Array,
+    w: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    cfg: CKMConfig,
+    x_init: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Step 4: CLOMPR decoding, with replicates selected by the cost (4)."""
+    ccfg = cfg.clompr_config()
+    keys = jax.random.split(key, cfg.replicates)
+    if cfg.replicates == 1:
+        return clompr(keys[0], z, w, lower, upper, ccfg, x_init)
+    run = functools.partial(clompr, cfg=ccfg)
+    if x_init is None:
+        cents, alphas, costs = jax.vmap(
+            lambda k_: run(k_, z, w, lower, upper)
+        )(keys)
+    else:
+        cents, alphas, costs = jax.vmap(
+            lambda k_: run(k_, z, w, lower, upper, x_init=x_init)
+        )(keys)
+    best = jnp.argmin(costs)
+    return cents[best], alphas[best], costs[best]
+
+
+def fit(key: jax.Array, x: jax.Array, cfg: CKMConfig) -> CKMResult:
+    """End-to-end compressive K-means on an in-memory dataset."""
+    k_sketch, k_dec = jax.random.split(key)
+    z, w, sigma2, (lo, hi) = compute_sketch(k_sketch, x, cfg)
+    x_init = x if cfg.init in ("sample", "kpp") else None
+    cents, alphas, cost = decode_sketch(k_dec, z, w, lo, hi, cfg, x_init)
+    return CKMResult(cents, alphas, cost, sigma2, w, z, (lo, hi))
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers (need data access — used for experiments only)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def sse(x: jax.Array, centroids: jax.Array, chunk: int = 16384) -> jax.Array:
+    """Sum of squared errors (1):  sum_i min_k ||x_i - c_k||^2 (chunked over N)."""
+    x = jnp.asarray(x, jnp.float32)
+    n_pts = x.shape[0]
+    pad = (-n_pts) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    valid = jnp.arange(x.shape[0]) < n_pts
+    xs = x.reshape(-1, chunk, x.shape[1])
+    vs = valid.reshape(-1, chunk)
+    c2 = jnp.sum(centroids * centroids, axis=1)  # (K,)
+
+    def body(acc, inp):
+        xc, vc = inp
+        d2 = (
+            jnp.sum(xc * xc, axis=1, keepdims=True)
+            - 2.0 * xc @ centroids.T
+            + c2[None, :]
+        )
+        return acc + jnp.sum(jnp.where(vc, jnp.min(d2, axis=1), 0.0)), None
+
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), (xs, vs))
+    return total
+
+
+@jax.jit
+def predict(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Hard assignment of each point to its nearest centroid."""
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        - 2.0 * x @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    return jnp.argmin(d2, axis=1)

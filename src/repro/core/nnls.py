@@ -1,0 +1,58 @@
+"""Non-negative least squares, jit-friendly (fixed shapes, fixed iterations).
+
+CLOMPR's steps 3 and 4 solve ``min_{beta >= 0} ||z - A beta||_2`` where ``A``
+stacks the (possibly normalised) atoms of the current support.  The support is
+kept as a *padded* buffer with a boolean column mask so the whole decoder stays
+inside one ``jit``.  We use FISTA (accelerated projected gradient) with a power
+-iteration Lipschitz estimate — Matlab's ``lsqnonneg`` (active set) is replaced
+by a fixed-iteration method with identical fixed points.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "power_iters"))
+def nnls(
+    a: jax.Array,
+    z: jax.Array,
+    mask: jax.Array,
+    iters: int = 200,
+    power_iters: int = 16,
+) -> jax.Array:
+    """Solve ``min_{beta>=0} ||z - a @ beta||`` with masked-out columns pinned to 0.
+
+    a:    (d, s)  — atom matrix (columns are atoms; padded columns arbitrary)
+    z:    (d,)    — target sketch
+    mask: (s,)    — True for active columns
+    """
+    maskf = mask.astype(a.dtype)
+    a = a * maskf[None, :]  # dead columns contribute nothing
+    gram = a.T @ a  # (s, s) — s is small (<= 2K), cheap & reused every step
+    atz = a.T @ z
+
+    # Lipschitz constant of grad: 2 * lambda_max(gram), via power iteration.
+    def pw(v, _):
+        v = gram @ v
+        return v / jnp.maximum(jnp.linalg.norm(v), 1e-30), None
+
+    v0 = jnp.ones((a.shape[1],), a.dtype) / jnp.sqrt(a.shape[1])
+    v, _ = jax.lax.scan(pw, v0, None, length=power_iters)
+    lam = jnp.maximum(v @ (gram @ v), 1e-12)
+    step = 1.0 / (2.0 * lam)
+
+    def body(carry, _):
+        beta, y, t = carry
+        grad = 2.0 * (gram @ y - atz)
+        beta_next = jnp.maximum(y - step * grad, 0.0) * maskf
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_next = beta_next + ((t - 1.0) / t_next) * (beta_next - beta)
+        return (beta_next, y_next, t_next), None
+
+    beta0 = jnp.zeros((a.shape[1],), a.dtype)
+    (beta, _, _), _ = jax.lax.scan(body, (beta0, beta0, jnp.asarray(1.0, a.dtype)), None, length=iters)
+    return beta

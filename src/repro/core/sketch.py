@@ -1,0 +1,126 @@
+"""The sketching operator ``Sk`` / ``A`` (paper §3.1), in JAX.
+
+The sketch of weighted points ``(Y, beta)`` at frequencies ``W = [w_1..w_m]`` is
+
+    Sk(Y, beta)_j = sum_l beta_l * exp(-i w_j^T y_l)          (complex, length m)
+
+Internally everything uses the *stacked-real* representation
+
+    z = [ sum_l beta_l cos(Y W) ,  -sum_l beta_l sin(Y W) ]   (real, length 2m)
+
+because (a) TPUs have no complex MXU path, (b) autodiff and Pallas kernels are
+simpler on reals, and (c) the l2 norm is preserved:  |z_complex|^2 == |z_real|^2.
+
+Every atom ``A delta_c`` has constant modulus 1 per frequency, hence constant
+norm ``||A delta_c||_2 = sqrt(m)`` — used by CLOMPR's normalised correlation step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sketch",
+    "sketch_complex",
+    "to_complex",
+    "from_complex",
+    "atom",
+    "atoms",
+    "atom_norm",
+    "data_bounds",
+]
+
+
+def _stacked(cos_part: jax.Array, sin_part: jax.Array) -> jax.Array:
+    return jnp.concatenate([cos_part, -sin_part], axis=-1)
+
+
+def to_complex(z: jax.Array) -> jax.Array:
+    """Stacked-real (…, 2m) -> complex (…, m)."""
+    m = z.shape[-1] // 2
+    return jax.lax.complex(z[..., :m], z[..., m:])
+
+
+def from_complex(zc: jax.Array) -> jax.Array:
+    """Complex (…, m) -> stacked-real (…, 2m)."""
+    return jnp.concatenate([jnp.real(zc), jnp.imag(zc)], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "vary_axes"))
+def sketch(
+    x: jax.Array,
+    w: jax.Array,
+    weights: jax.Array | None = None,
+    chunk: int = 8192,
+    vary_axes: tuple[str, ...] = (),
+) -> jax.Array:
+    """Sketch of points ``x: (N, n)`` at frequencies ``w: (n, m)``.
+
+    Returns the stacked-real sketch ``(2m,)``.  ``weights`` defaults to uniform
+    ``1/N``.  Computation is chunked over N with an f32 accumulator so the
+    ``(N, m)`` projection matrix never fully materialises.
+
+    ``vary_axes``: when called inside ``shard_map`` on per-device shards, the
+    scan carry must be marked as varying over the manual mesh axes.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n_pts = x.shape[0]
+    m = w.shape[1]
+    if weights is None:
+        weights = jnp.full((n_pts,), 1.0 / n_pts, jnp.float32)
+    else:
+        weights = jnp.asarray(weights, jnp.float32)
+
+    pad = (-n_pts) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)], axis=0)
+    n_chunks = x.shape[0] // chunk
+    xs = x.reshape(n_chunks, chunk, -1)
+    ws_ = weights.reshape(n_chunks, chunk)
+
+    def body(acc, inp):
+        xc, bc = inp
+        proj = xc @ w  # (chunk, m)
+        c = bc @ jnp.cos(proj)  # (m,)
+        s = bc @ jnp.sin(proj)
+        return (acc[0] + c, acc[1] + s), None
+
+    acc0 = jnp.zeros((m,), jnp.float32)
+    if vary_axes:
+        acc0 = jax.lax.pcast(acc0, vary_axes, to="varying")
+    (cos_acc, sin_acc), _ = jax.lax.scan(body, (acc0, acc0), (xs, ws_))
+    return _stacked(cos_acc, sin_acc)
+
+
+def sketch_complex(
+    x: jax.Array, w: jax.Array, weights: jax.Array | None = None, chunk: int = 8192
+) -> jax.Array:
+    """Complex view of :func:`sketch` — matches the paper's ``Sk(Y, beta)``."""
+    return to_complex(sketch(x, w, weights, chunk))
+
+
+def atom(c: jax.Array, w: jax.Array) -> jax.Array:
+    """``A delta_c`` for a single centroid ``c: (n,)`` -> stacked-real ``(2m,)``."""
+    proj = c @ w  # (m,)
+    return _stacked(jnp.cos(proj), jnp.sin(proj))
+
+
+def atoms(cs: jax.Array, w: jax.Array) -> jax.Array:
+    """``A delta_c`` for centroids ``cs: (S, n)`` -> ``(S, 2m)``."""
+    proj = cs @ w  # (S, m)
+    return _stacked(jnp.cos(proj), jnp.sin(proj))
+
+
+def atom_norm(m: int) -> float:
+    """||A delta_c||_2 — constant: every frequency sample has modulus 1."""
+    return float(jnp.sqrt(m))
+
+
+@jax.jit
+def data_bounds(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-coordinate bounds ``l <= x_i <= u`` — same single pass as the sketch."""
+    return jnp.min(x, axis=0), jnp.max(x, axis=0)

@@ -1,0 +1,115 @@
+"""Compressive data clustering for pipeline balancing (paper integration #2).
+
+A 1000-node ingestion tier cannot afford a second pass over the corpus to
+cluster document embeddings — but it CAN afford an O(m) mergeable sketch per
+worker (the paper's central object).  This module:
+
+1. folds document-embedding batches into a streaming ``SketchState`` (one per
+   worker; merged with ``distributed_sketch.merge`` / a psum),
+2. decodes K domain centroids with CKM *from the sketch alone*,
+3. estimates per-cluster mass from the decoded mixture weights alpha, and
+4. emits rebalanced sampling weights (inverse-propensity toward uniform).
+
+No raw data is retained anywhere: this is exactly the paper's
+"sketch-then-discard" contract applied to a data pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ckm as ckm_mod
+from repro.core import distributed_sketch as ds
+from repro.core import frequencies as fq
+
+
+@dataclasses.dataclass
+class CompressiveBalancer:
+    """Streaming sketch of document embeddings -> cluster-balanced weights."""
+
+    k: int
+    dim: int
+    m: int | None = None
+    sigma2: float | None = None  # None: estimated on the FIRST batch (paper's
+    # small-sketch regression on a data fraction, §3.3 step 1)
+    # The [5] estimator targets GMM decoding, where the model absorbs the
+    # cluster envelope e^{-R^2 sigma_c^2/2}.  K-means decodes DIRACS: at the
+    # GMM scale the envelope is ~0.4 at typical frequencies and CLOMPR
+    # "explains" a wide cluster better with two split atoms than one —
+    # catastrophic under imbalance (the split halves outweigh small clusters
+    # at hard-thresholding).  Boosting sigma^2 (lowering frequencies) to
+    # where the envelope is ~flat removes the incentive; separability is
+    # unaffected while separation >> cluster std.  (Beyond-paper; see
+    # EXPERIMENTS.md §Paper notes.)
+    freq_scale_boost: float = 6.0
+    seed: int = 0
+    # Tiny reservoir kept alongside the sketch: CLOMPR's step-1 ascent starts
+    # from sampled points (paper §4.2 "Sample" init) — random "Range" starts
+    # cannot find far-separated clusters whose basins occupy ~(w/box)^dim of
+    # the volume.  One pass, O(reservoir) memory: the compressive contract
+    # (no second data pass, no full retention) is preserved.
+    reservoir: int = 256
+
+    def __post_init__(self):
+        self.m_ = self.m or 10 * self.k * self.dim
+        self.state = ds.init_state(self.m_, self.dim)
+        self.freqs = None
+        self._seen = 0
+        self._rng = np.random.default_rng(self.seed + 13)
+        self._reservoir = np.zeros((self.reservoir, self.dim), np.float32)
+        if self.sigma2 is not None:
+            self._draw(float(self.sigma2))
+
+    def _draw(self, sigma2: float):
+        self.sigma2 = sigma2
+        key = jax.random.PRNGKey(self.seed)
+        self.freqs = fq.draw_frequencies(key, self.m_, self.dim, sigma2)
+
+    def _reservoir_update(self, embeds: np.ndarray):
+        for row in embeds:
+            if self._seen < self.reservoir:
+                self._reservoir[self._seen] = row
+            else:
+                j = self._rng.integers(0, self._seen + 1)
+                if j < self.reservoir:
+                    self._reservoir[j] = row
+            self._seen += 1
+
+    def update(self, embeds: jax.Array):
+        """Fold one batch of document embeddings (B, dim) into the sketch."""
+        if self.freqs is None:
+            s2 = fq.estimate_sigma2(jax.random.PRNGKey(self.seed + 7), embeds)
+            self._draw(float(s2) * self.freq_scale_boost)
+        self.state = ds.update(self.state, embeds, self.freqs)
+        self._reservoir_update(np.asarray(embeds, np.float32))
+
+    def merge(self, other: "CompressiveBalancer"):
+        self.state = ds.merge(self.state, other.state)
+
+    def cluster(self, key=None) -> ckm_mod.CKMResult:
+        """Decode centroids + mixture weights from the sketch (+ reservoir
+        inits for step 1 — paper §4.2 Sample strategy)."""
+        key = key if key is not None else jax.random.PRNGKey(self.seed + 1)
+        z, lo, hi = ds.finalize(self.state)
+        cfg = ckm_mod.CKMConfig(k=self.k, m=self.m_, init="kpp", atom_restarts=4)
+        x_init = jnp.asarray(self._reservoir[: min(self._seen, self.reservoir)])
+        cents, alphas, cost = ckm_mod.decode_sketch(
+            key, z, self.freqs, lo, hi, cfg, x_init=x_init
+        )
+        return ckm_mod.CKMResult(
+            cents, alphas, cost, jnp.asarray(self.sigma2), self.freqs, z, (lo, hi)
+        )
+
+    def balanced_weights(self, result: ckm_mod.CKMResult | None = None) -> np.ndarray:
+        """Per-cluster sampling weights pushing the stream toward uniform."""
+        result = result or self.cluster()
+        alpha = np.maximum(np.asarray(result.weights), 1e-6)
+        w = 1.0 / alpha
+        return w / w.sum()
+
+    def assign_clusters(self, embeds: jax.Array, result: ckm_mod.CKMResult):
+        return ckm_mod.predict(embeds, result.centroids)

@@ -1,0 +1,110 @@
+"""Deterministic sharded data pipeline.
+
+Fault-tolerance contract: batches are a pure function of (seed, step) — a
+restart from step k reproduces the exact token stream with no iterator state
+to checkpoint.  The same contract gives straggler-safe re-dispatch: any worker
+can regenerate any step's shard.
+
+Sources:
+- ``SyntheticLM``: zipf-ish token stream with planted cluster structure in a
+  "document embedding" side-channel (drives the CKM data-clustering demo);
+- ``MixtureSource``: weighted mixture of sources whose weights can be re-set
+  from the compressive cluster balancer (data/clustering.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    n_domains: int = 8  # planted "topic" clusters for the CKM demo
+    embed_dim: int = 16  # document-embedding side channel
+
+
+class SyntheticLM:
+    """Batch = f(seed, step): deterministic, restartable, shardable."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, data: DataConfig):
+        self.cfg = cfg
+        self.shape = shape
+        self.data = data
+        rng = np.random.default_rng(data.seed)
+        # Per-domain unigram tables (zipf with domain-specific permutations)
+        # and domain embedding centroids (the ground truth the CKM balancer
+        # should recover).
+        v = cfg.vocab_size
+        base = 1.0 / (np.arange(1, v + 1) ** 1.1)
+        self.domain_perm = np.stack(
+            [rng.permutation(v) for _ in range(data.n_domains)]
+        )
+        self.base_p = base / base.sum()
+        self.domain_centroids = rng.normal(
+            size=(data.n_domains, data.embed_dim)
+        ).astype(np.float32) * 3.0
+        self.domain_weights = np.full(data.n_domains, 1.0 / data.n_domains)
+
+    def set_domain_weights(self, w: np.ndarray):
+        w = np.maximum(np.asarray(w, np.float64), 1e-9)
+        self.domain_weights = w / w.sum()
+
+    def batch(self, step: int) -> dict:
+        """Produce the global batch for ``step`` (tokens, labels, embeds)."""
+        cfg, shape = self.cfg, self.shape
+        rng = np.random.default_rng((self.data.seed, step))
+        b = shape.global_batch
+        s_text = shape.seq_len - (
+            cfg.frontend_len if cfg.frontend == "vision" else 0
+        )
+        domains = rng.choice(
+            self.data.n_domains, size=b, p=self.domain_weights
+        )
+        # Tokens: domain-permuted zipf draws (cheap, deterministic).
+        u = rng.random((b, s_text + 1))
+        cdf = np.cumsum(self.base_p)
+        ranks = np.searchsorted(cdf, u).clip(max=cfg.vocab_size - 1)
+        tokens = np.take_along_axis(
+            self.domain_perm[domains][:, None, :].reshape(b, -1),
+            ranks.reshape(b, -1),
+            axis=1,
+        ).reshape(b, s_text + 1)
+        batch = {
+            "tokens": jnp.asarray(tokens[:, :-1], jnp.int32),
+            "labels": jnp.asarray(tokens[:, 1:], jnp.int32),
+        }
+        if cfg.frontend == "vision":
+            batch["patches"] = jnp.asarray(
+                rng.normal(size=(b, cfg.frontend_len, cfg.d_model)), jnp.float32
+            )
+        elif cfg.frontend == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(b, cfg.frontend_len, cfg.d_model)), jnp.float32
+            )
+        # Document-embedding side channel (noisy domain centroid) — consumed
+        # by the compressive balancer, not by the model.
+        embeds = self.domain_centroids[domains] + rng.normal(
+            size=(b, self.data.embed_dim)
+        ).astype(np.float32)
+        batch["_doc_embeds"] = jnp.asarray(embeds)
+        batch["_domains"] = jnp.asarray(domains, jnp.int32)
+        return batch
+
+    def iter(self, start_step: int, shardings=None) -> Iterator[dict]:
+        step = start_step
+        while True:
+            batch = self.batch(step)
+            meta = {k: batch.pop(k) for k in ("_doc_embeds", "_domains")}
+            if shardings is not None:
+                batch = jax.device_put(batch, shardings)
+            batch.update(meta)
+            yield batch
+            step += 1

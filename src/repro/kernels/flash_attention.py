@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention (forward), online softmax.
+
+WHY (EXPERIMENTS.md §Perf): every train/prefill cell in the roofline table is
+memory-bound on attention score traffic — the (bq, S) QK^T blocks and the
+probs make three HBM round-trips per layer in the XLA path.  This kernel
+keeps the entire softmax pipeline in VMEM: HBM traffic collapses to
+Q + K + V + O (+ the (bq,) online statistics), independent of S^2.
+
+Mapping (one grid step = one (batch*head, q-block)):
+- grid = (B*H, S_q / block_q)
+- q tile   (block_q, hd)   VMEM
+- k/v tile (S_kv, hd)      VMEM, consumed in block_k chunks by an inner
+  fori_loop (online softmax) — GQA's h -> h // rep head mapping happens in
+  the BlockSpec index_map, so the kernel body is head-agnostic
+- accumulators: o (block_q, hd) f32, running max m and sum l (block_q,) f32 —
+  the standard online-softmax recurrence (FlashAttention).
+- causal + sliding-window masking enters as a position mask computed from
+  absolute positions; fully-masked kv chunks still execute (static trip
+  count) but contribute exp(-inf) = 0.
+
+The backward pass is intentionally NOT implemented: training integration
+needs the dO recomputation kernel (future work); serving (prefill)
+integration goes through kernels/ops.py.  The forward emits the LSE so a
+backward can be added without re-running the forward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int, s_kv: int,
+    causal: bool, window: int, scale: float,
+):
+    _, bq, hd = q_ref.shape
+    q_blk_idx = pl.program_id(1)
+    q0 = q_blk_idx * bq  # absolute position of the first query in this tile
+    q = q_ref[0].astype(jnp.float32) * scale
+
+    def body(i, carry):
+        o, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], i * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], i * block_k, block_k, 0)
+        s = q @ k.astype(jnp.float32).T  # (bq, bk) on the MXU
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        kpos = i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1
+        )
+        mask = jnp.ones((bq, block_k), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        # online softmax update
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        o_new = o * alpha[:, None] + p @ v.astype(jnp.float32)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    o, m, l = jax.lax.fori_loop(0, s_kv // block_k, body, (o0, m0, l0))
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0, ...] = (o / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0, ...] = (m + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rep", "causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (B*H, S_q, hd) — heads pre-flattened
+    k: jax.Array,  # (B*KV, S_kv, hd)
+    v: jax.Array,
+    rep: int = 1,  # GQA replication: q row h reads k/v row h // rep
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
+    """Raw launch: shapes must be pre-padded to the block sizes (see ops.py)."""
+    bh, s_q, hd = q.shape
+    s_kv = k.shape[1]
+    assert s_q % block_q == 0 and s_kv % block_k == 0, (s_q, s_kv)
+    grid = (bh, s_q // block_q)
+    scale = 1.0 / (hd**0.5)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=block_k, s_kv=s_kv, causal=causal, window=window, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, s_kv, hd), lambda h, i: (h // rep, 0, 0)),
+            pl.BlockSpec((1, s_kv, hd), lambda h, i: (h // rep, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, block_q), lambda h, i: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s_q, hd), q.dtype),
+            jax.ShapeDtypeStruct((bh, s_q), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

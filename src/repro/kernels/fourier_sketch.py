@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused random-Fourier-feature sketch.
+
+The sketch hot-spot is  z = sum_i beta_i [cos(x_i W); sin(x_i W)] — a
+``(N, n) @ (n, m)`` matmul followed by elementwise trig and a reduction over N.
+The naive XLA path materialises the ``(N, m)`` projection in HBM (O(N m) bytes
+moved three times: write proj, read for trig, read for reduce).  This kernel
+keeps each projection *tile* in VMEM: the MXU computes a ``(bN, n)·(n, bM)``
+tile, the VPU applies cos/sin in place, and the weighted batch-reduction
+accumulates straight into the output block across the reduction grid axis.
+Arithmetic intensity goes from O(1) to O(bN) — the op flips from memory-bound
+to compute-bound (see EXPERIMENTS.md §Kernels for the roofline numbers).
+
+Grid: ``(m_blocks, n_blocks_of_N)`` — the N axis is the innermost (fastest)
+grid dimension so each output block stays resident in VMEM while the batch
+streams through it (Pallas revisiting semantics).
+
+TPU alignment: callers (ops.py) pad m to a multiple of the lane width (128),
+N to the block size, and the feature dim n to a multiple of 8; f32 tiles are
+(8, 128)-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sketch_kernel(x_ref, w_ref, b_ref, cos_ref, sin_ref):
+    """One (bN, bM) tile: proj = x @ w; accumulate beta-weighted cos/sin."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cos_ref[...] = jnp.zeros_like(cos_ref)
+        sin_ref[...] = jnp.zeros_like(sin_ref)
+
+    # MXU: (bN, n) @ (n, bM) in f32.
+    proj = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    beta = b_ref[...]  # (bN, 1)
+    # VPU: trig + weighted reduce over the batch tile, all in VMEM.
+    cos_ref[...] += jnp.sum(jnp.cos(proj) * beta, axis=0, keepdims=True)
+    sin_ref[...] += jnp.sum(jnp.sin(proj) * beta, axis=0, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_m", "interpret")
+)
+def fourier_sketch_kernel(
+    x: jax.Array,
+    w: jax.Array,
+    beta: jax.Array,
+    block_n: int = 1024,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw kernel launch: inputs must be pre-padded/aligned (see ops.py).
+
+    x: (N, n) f32, w: (n, m) f32, beta: (N, 1) f32
+    -> (cos_sums (1, m), sin_sums (1, m)) f32
+    """
+    n_pts, feat = x.shape
+    m = w.shape[1]
+    assert n_pts % block_n == 0 and m % block_m == 0, (n_pts, m)
+    grid = (m // block_m, n_pts // block_n)
+    return pl.pallas_call(
+        _sketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, feat), lambda i, j: (j, 0)),
+            pl.BlockSpec((feat, block_m), lambda i, j: (0, i)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, beta)

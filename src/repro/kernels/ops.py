@@ -1,0 +1,149 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding/alignment (lane width 128, sublane 8, block divisibility) and
+backend dispatch: on TPU the compiled kernels run natively; on CPU (this
+container) they run in ``interpret=True`` mode, which executes the kernel body
+in Python for correctness validation.  Padded regions are constructed so they
+cannot perturb results (zero weights, +inf distances), and outputs are sliced
+back to logical shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import assign_argmin as _assign
+from repro.kernels import fourier_sketch as _sketch
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def fourier_sketch(
+    x: jax.Array,
+    w: jax.Array,
+    beta: jax.Array | None = None,
+    block_n: int = 1024,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused sketch -> stacked-real ``(2m,)``: [sum b cos(xW), -sum b sin(xW)].
+
+    Drop-in replacement for ``core.sketch.sketch`` (same convention).  ``beta``
+    defaults to uniform ``1/N``.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    n_pts = x.shape[0]
+    m = w.shape[1]
+    if beta is None:
+        beta = jnp.full((n_pts,), 1.0 / n_pts, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32).reshape(-1, 1)
+
+    block_n = min(block_n, max(8, 1 << (n_pts - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))
+    # Pad: N to block (zero weight rows are no-ops), n to sublane multiple
+    # (zero feature columns shift no phases), m to block (sliced off below).
+    x = _pad_to(_pad_to(x, 0, block_n), 1, 8)
+    beta = _pad_to(beta, 0, block_n)
+    w = _pad_to(_pad_to(w, 0, 8), 1, block_m)
+    cos_s, sin_s = _sketch.fourier_sketch_kernel(
+        x, w, beta, block_n=block_n, block_m=block_m, interpret=interpret
+    )
+    return jnp.concatenate([cos_s[0, :m], -sin_s[0, :m]])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S_q, H, hd)
+    k: jax.Array,  # (B, S_kv, KV, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused flash attention (forward) — drop-in for the q-chunked XLA path
+    of ``models.layers.attention_apply`` at serving/prefill time.
+
+    HBM traffic: Q+K+V+O only (vs O(S^2) score blocks).  GQA handled via the
+    kernel's head->kv index map.  Returns (B, S_q, H*hd).
+    """
+    from repro.kernels import flash_attention as _fa
+
+    if interpret is None:
+        interpret = _on_cpu()
+    b, s_q, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s_q, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, v.shape[1], hd)
+    block_q = min(block_q, max(8, 1 << (s_q - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    pad_q = (-s_q) % block_q
+    pad_k = (-k.shape[1]) % block_k
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded kv positions sit at the causal future: masked out for every
+        # real query by the position mask.
+        assert causal, "kv padding requires the causal mask"
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    o, _lse = _fa.flash_attention_kernel(
+        qf, kf, vf, rep=rep, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    o = o[:, :s_q].reshape(b, h, s_q, hd).transpose(0, 2, 1, 3)
+    return o.reshape(b, s_q, h * hd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def assign_argmin(
+    x: jax.Array,
+    c: jax.Array,
+    block_n: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused nearest-centroid assignment: (labels (N,) i32, min d^2 (N,) f32)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n_pts = x.shape[0]
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    block_n = min(block_n, max(8, 1 << (n_pts - 1).bit_length()))
+    # Pad features with zeros (adds the same constant to every distance: the
+    # argmin is unchanged and the constant is zero since pads match), pad K
+    # with +inf-distance phantom centroids, pad N to block.
+    x = _pad_to(_pad_to(x, 0, block_n), 1, 8)
+    c = _pad_to(c, 1, 8)
+    k = c.shape[0]
+    pad_k = (-k) % 8
+    if pad_k:
+        # Phantom centroids far away: never win the argmin.
+        far = jnp.full((pad_k, c.shape[1]), 1e18, c.dtype)
+        c = jnp.concatenate([c, far], axis=0)
+    idx, dist = _assign.assign_argmin_kernel(x, c, block_n=block_n, interpret=interpret)
+    return idx[:n_pts], dist[:n_pts]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fourier_sketch_ref(
+    x: jax.Array, w: jax.Array, beta: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(cos_sums (m,), sin_sums (m,)) — unchunked, unfused reference."""
+    proj = x.astype(jnp.float32) @ w.astype(jnp.float32)  # (N, m)
+    b = beta.reshape(-1).astype(jnp.float32)
+    return b @ jnp.cos(proj), b @ jnp.sin(proj)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, rep: int = 1,
+    causal: bool = True, window: int = 0,
+) -> jax.Array:
+    """Plain softmax attention over flattened heads (the kernel's oracle).
+
+    q: (BH, S_q, hd); k/v: (BKV, S_kv, hd); q row h attends k/v row h//rep.
+    """
+    bh, s_q, hd = q.shape
+    kk = jnp.repeat(k, rep, axis=0)
+    vv = jnp.repeat(v, rep, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / jnp.sqrt(hd)
+    qpos = jnp.arange(s_q)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s_q, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def assign_argmin_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(assignment (N,) i32, min squared distance (N,) f32) — full matrix."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, axis=1, keepdims=True)
+        - 2.0 * x @ c.T
+        + jnp.sum(c * c, axis=1)[None, :]
+    )
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)

@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment: MULTI-POD DRY-RUN §1).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.  Callers needing 512 placeholder devices must set XLA_FLAGS
+before any jax import (see launch/dryrun.py's first two lines).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int | None = None) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

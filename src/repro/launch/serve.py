@@ -1,0 +1,114 @@
+"""Serving step construction: sharded prefill / decode (serve_step).
+
+``decode_*`` / ``long_*`` cells lower ``serve_step`` — one new token against a
+KV cache of seq_len — per the assignment.  Cache shardings: sequence dim over
+"model" (SP decode attention), batch over (pod, data) where divisible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.parallel import sharding as sh
+
+
+def cache_mode(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    return "ckm" if (shape.kind == "long_decode" and cfg.long_context == "ckm") else "full"
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: tfm.init_cache(
+            cfg, shape.global_batch, shape.seq_len, cache_mode(cfg, shape), dtype
+        )
+    )
+
+
+def params_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Serving params are bf16 (123B f32 would not fit a 16-chip TP slice)."""
+
+    def init():
+        p = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+        return jax.tree.map(
+            lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, p
+        )
+
+    return jax.eval_shape(init)
+
+
+def jit_serve_step(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, dtype=jnp.bfloat16, donate=True
+):
+    """Jitted decode step + (shapes, shardings) for the dry-run."""
+    pshapes = params_shapes(cfg)
+    # 2D weight sharding at serve too: "F" dims over data (123B bf16 / 16 TP
+    # shards alone is 15 GB/chip; over data x model it is <1 GB).
+    pspecs = sh.param_specs(pshapes, cfg, mesh, fsdp_axis="data")
+    cshapes = cache_shapes(cfg, shape, dtype)
+    cspecs = sh.cache_specs(cshapes, cfg, shape, mesh)
+    ba = sh.batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    tok_spec = P(ba if shape.global_batch % dp == 0 and shape.global_batch >= dp else None, None)
+
+    def serve_step(params, token, cache, index):
+        logits, new_cache = tfm.decode_step(
+            params, cfg, token, cache, index, mesh=mesh, dtype=dtype
+        )
+        return logits, new_cache
+
+    shardings = lambda spec: sh.to_shardings(spec, mesh)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(
+            shardings(pspecs),
+            NamedSharding(mesh, tok_spec),
+            shardings(cspecs),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, tok_spec),
+            shardings(cspecs),
+        ),
+        donate_argnums=(2,) if donate else (),
+    )
+    token_shape = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    index_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    return jitted, (pshapes, token_shape, cshapes, index_shape)
+
+
+def jit_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, dtype=jnp.bfloat16):
+    """Jitted prefill for prefill_* cells."""
+    from repro.launch.specs import prefill_batch_specs
+
+    pshapes = params_shapes(cfg)
+    pspecs = sh.param_specs(pshapes, cfg, mesh, fsdp_axis="data")
+    bspecs = sh.batch_specs(cfg, shape, mesh)
+    bspecs.pop("labels", None)
+    cshapes = cache_shapes(cfg, shape, dtype)
+    cspecs = sh.cache_specs(cshapes, cfg, shape, mesh)
+    ba = sh.batch_axes(mesh)
+    dp = 1
+    for a in ba:
+        dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    tok_spec = P(ba if shape.global_batch % dp == 0 and shape.global_batch >= dp else None, None)
+
+    def prefill(params, batch):
+        return tfm.prefill(params, cfg, batch, cache_len=shape.seq_len, mesh=mesh, dtype=dtype)
+
+    shardings = lambda spec: sh.to_shardings(spec, mesh)
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(shardings(pspecs), shardings(bspecs)),
+        out_shardings=(
+            NamedSharding(mesh, tok_spec),
+            shardings(cspecs),
+            NamedSharding(mesh, P()),
+        ),
+    )
+    return jitted, (pshapes, prefill_batch_specs(cfg, shape))

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+The dry-run lowers against these — weak-type-correct, shardable, and never
+allocated.  Frontend stubs per the assignment: precomputed patch/frame
+embeddings replace the vision/audio towers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.frontend_len if cfg.frontend == "vision" else s
+    batch = {
+        "tokens": sds((b, s_text), jnp.int32),
+        "labels": sds((b, s_text), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["patches"] = sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "audio":
+        batch["frames"] = sds((b, cfg.frontend_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return sds((shape.global_batch, 1), jnp.int32)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None) -> dict:
+    """Materialise a random batch matching the specs (small shapes only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = train_batch_specs(cfg, shape)
+    kt, kf = jax.random.split(key)
+    out = {
+        "tokens": jax.random.randint(
+            kt, specs["tokens"].shape, 0, cfg.vocab_size, jnp.int32
+        ),
+    }
+    out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    for name in ("patches", "frames"):
+        if name in specs:
+            out[name] = jax.random.normal(kf, specs[name].shape, jnp.float32)
+    return out

@@ -1,0 +1,332 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (global / sliding
+-window, train / prefill / decode), SwiGLU MLP, embeddings.
+
+Conventions
+-----------
+- Pure functional: ``init_*`` returns a param pytree; ``*_apply`` consumes it.
+- Activations default to bf16; params and softmax/norm statistics in f32.
+- Attention is q-block-chunked with lazily materialised masks so a 32k-token
+  prefill never builds an (S, S) mask or score matrix; block size is a config.
+- Sharding is applied OUTSIDE via GSPMD constraints (parallel/sharding.py);
+  layer code stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, in_axis=0):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+        jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 *statistics* but activation-dtype application.
+
+    Upcasting the whole tensor to f32 (the naive way) makes XLA materialise
+    and reshard full f32 activations around every layer — measured as the
+    second-largest HBM term at mistral scale.  The variance reduction stays
+    exact in f32; the normalisation multiply runs in the activation dtype.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+@jax.custom_vjp
+def _softmax_bf16(scores: jax.Array) -> jax.Array:
+    """Softmax over the last axis: f32 math inside, bf16 in/out, and —
+    crucially — only the bf16 PROBS are saved for backward (plain
+    jax.nn.softmax saves its f32 output as the VJP residual, doubling the
+    dominant attention HBM term)."""
+    x = scores.astype(jnp.float32)
+    p = jax.nn.softmax(x, axis=-1)
+    return p.astype(jnp.bfloat16)
+
+
+def _softmax_bf16_fwd(scores):
+    p = _softmax_bf16(scores)
+    return p, p
+
+
+def _softmax_bf16_bwd(p, g):
+    pf = p.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    dot = jnp.sum(pf * gf, axis=-1, keepdims=True)
+    return ((pf * (gf - dot)).astype(jnp.bfloat16),)
+
+
+_softmax_bf16.defvjp(_softmax_bf16_fwd, _softmax_bf16_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..,S,1,half)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: int = 0  # 0 -> global causal; >0 -> sliding window
+    rope_theta: float = 1e4
+    q_block: int = 512  # query chunk for lazy-mask attention
+    score_dtype: str = "f32"  # storage dtype of QK^T blocks (see ModelConfig)
+
+
+def init_attention(key, dims: AttnDims) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, kvh, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": _dense_init(kq, (d, h * hd)),
+        "wk": _dense_init(kk, (d, kvh * hd)),
+        "wv": _dense_init(kv, (d, kvh * hd)),
+        "wo": _dense_init(ko, (h * hd, d)),
+    }
+
+
+def _noshard(x, kind):
+    return x
+
+
+def _qkv(params, dims: AttnDims, x, positions, shard=_noshard):
+    b, s, _ = x.shape
+    h, kvh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = shard((x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd), "heads")
+    k = shard((x @ params["wk"].astype(x.dtype)).reshape(b, s, kvh, hd), "kv")
+    v = shard((x @ params["wv"].astype(x.dtype)).reshape(b, s, kvh, hd), "kv")
+    q = rope(q, positions, dims.rope_theta)
+    k = rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def _attend_block(q_blk, k, v, q_pos, k_pos, dims: AttnDims, causal: bool):
+    """q_blk: (B, bq, H, hd); k/v: (B, S, KV, hd). Lazy mask via positions.
+
+    The mask enters as an ADDITIVE f32 bias: addition is linear, so autodiff
+    saves no residual for it — a boolean `where` mask would be stacked across
+    the q-block scan as an (nblk, B, KV, rep, bq, S) pred residual (terabytes
+    at 4k x 256).
+    """
+    h, kvh = dims.n_heads, dims.n_kv_heads
+    rep = h // kvh
+    b, bq, _, hd = q_blk.shape
+    s = k.shape[1]
+    qh = q_blk.reshape(b, bq, kvh, rep, hd)
+    # Score storage dtype: the QK^T block is the fusion boundary that
+    # dominates HBM traffic at training shapes; bf16 storage halves it.
+    # Softmax statistics are always computed in f32 inside the fusion.
+    mask = jnp.ones((bq, s), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if dims.window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < dims.window
+    if dims.score_dtype == "bf16":
+        # bf16 score storage + a softmax whose VJP residual is the bf16
+        # probs (a TPU MXU emits bf16 dots directly; plain f32 softmax saves
+        # f32 probs — the dominant train-cell HBM term).
+        scale = (1.0 / jnp.sqrt(hd)).astype(jnp.bfloat16)
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", qh * scale.astype(qh.dtype), k)
+        bias = jnp.where(mask, 0.0, -3e38).astype(jnp.bfloat16)
+        scores = (scores.astype(jnp.bfloat16) + bias[None, None, None])
+        scores = jax.lax.optimization_barrier(scores)
+        probs = _softmax_bf16(scores).astype(v.dtype)
+    else:
+        scores = jnp.einsum("bqkrh,bskh->bkrqs", qh, k).astype(jnp.float32)
+        scores *= 1.0 / jnp.sqrt(hd)
+        bias = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)  # (bq, s)
+        scores = scores + bias[None, None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(b, bq, h * hd)
+
+
+def attention_apply(
+    params: Params,
+    dims: AttnDims,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    return_kv: bool = False,
+    shard=_noshard,
+):
+    """Training/prefill attention, q-chunked (no (S,S) materialisation)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, dims, x, positions, shard)
+    blk = min(dims.q_block, s)
+    pad = (-s) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = q.shape[1] // blk
+    kpos = positions[0] if positions.ndim > 1 else positions
+
+    def body(carry, i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * blk, blk, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(kpos, i * blk, blk)
+        # Padded tail queries read garbage positions; output sliced off below.
+        qpos = jnp.where(jnp.arange(blk) + i * blk < s, qpos, kpos[-1])
+        return carry, _attend_block(qb, k, v, qpos, kpos, dims, causal)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nblk))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nblk * blk, -1)[:, :s]
+    out = out @ params["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(
+    params: Params,
+    dims: AttnDims,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    index: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode step against a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, S_cache, KV, hd); index: () current position.
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).  For sliding-window
+    layers the cache is a ring buffer of size ``window``.
+    """
+    b = x.shape[0]
+    h, kvh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    s_cache = cache_k.shape[1]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q, k_new, v_new = _qkv(params, dims, x, pos)
+    slot = index % s_cache if dims.window > 0 else index
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+
+    rep = h // kvh
+    qh = q.reshape(b, 1, kvh, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qh, cache_k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(hd)
+    cache_pos = jnp.arange(s_cache)
+    if dims.window > 0:
+        # Ring buffer: slot i holds absolute position matching (index - delta).
+        valid = (cache_pos <= slot) | (index >= s_cache)
+        in_window = jnp.ones_like(valid)  # ring size == window
+        mask = valid & in_window
+    else:
+        mask = cache_pos <= index
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, cache_v).reshape(b, 1, h * hd)
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def cross_attention_apply(
+    params: Params, dims: AttnDims, x: jax.Array, enc_kv: tuple[jax.Array, jax.Array]
+) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    b, s, _ = x.shape
+    h, kvh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k, v = enc_kv
+    rep = h // kvh
+    qh = q.reshape(b, s, kvh, rep, hd)
+    scores = jnp.einsum("bqkrh,bskh->bkrqs", qh, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v).reshape(b, s, h * hd)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encoder_kv(params: Params, dims: AttnDims, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    kvh, hd = dims.n_kv_heads, dims.head_dim
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(b, s, kvh, hd)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(b, s, kvh, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, ff)),
+        "w_up": _dense_init(k2, (d, ff)),
+        "w_down": _dense_init(k3, (ff, d)),
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array, shard=_noshard) -> jax.Array:
+    dt = x.dtype
+    gate = shard(jax.nn.silu(x @ params["w_gate"].astype(dt)), "ffn")
+    up = shard(x @ params["w_up"].astype(dt), "ffn")
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(params: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["table"].astype(x.dtype).T
+
+
+def init_lm_head(key, d: int, vocab: int) -> Params:
+    return {"w": _dense_init(key, (d, vocab))}
+
+
+def lm_head(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)

@@ -1,0 +1,247 @@
+"""Mixture-of-Experts FFN with expert parallelism (EP) over the "model" axis.
+
+Design (DESIGN.md §3): activations between layers keep ``d_model`` replicated
+across the model axis (Megatron-style TP).  That means every model shard
+already holds every token — so expert parallelism needs NO token all-to-all:
+
+  each model shard owns E/|model| experts; it sorts+scatters the tokens routed
+  to ITS experts into fixed-capacity buffers, runs its expert FFNs, gathers
+  results back to token order, and a single psum over the model axis combines
+  the per-shard partial outputs (a token's experts live on exactly the shards
+  that own them; all other shards contribute zeros).
+
+Cross-shard traffic is ONE (T, d_model) psum per MoE layer — identical in
+shape to the dense-MLP TP all-reduce it replaces.  Buffers are
+(E_local, capacity, d): the (T, E) one-hot dispatch tensor of GShard never
+materialises.  Overflowing tokens beyond capacity are dropped (standard).
+
+Two compute paths:
+- ``dispatch`` (sort+scatter, above) for training/prefill where T is large;
+- ``dense``   for single-token decode: every shard runs all its local experts
+  on the (few) tokens, masked by the router — cheaper than dispatch when
+  T * top_k ~ E_local and avoids gather/scatter churn at decode.
+
+The router-initialisation hook from compressive clustering (paper tie-in)
+lives in ``router_init_from_ckm``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def init_moe(key, dims: MoEDims) -> Params:
+    ks = jax.random.split(key, 4)
+    e, d, f = dims.n_experts, dims.d_model, dims.d_ff
+    return {
+        "router": _dense_init(ks[0], (d, e)),
+        "w_gate": _dense_init(ks[1], (e, d, f), in_axis=1),
+        "w_up": _dense_init(ks[2], (e, d, f), in_axis=1),
+        "w_down": _dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+
+
+def route(params: Params, dims: MoEDims, x_flat: jax.Array):
+    """Top-k routing.  x_flat: (T, d) -> (gates (T,k) f32, ids (T,k) i32, aux)."""
+    logits = (x_flat.astype(jnp.float32)) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, dims.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Load-balance aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(ids[:, 0], dims.n_experts, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = dims.n_experts * jnp.sum(me * ce)
+    return gates, ids, aux
+
+
+def _capacity(t_local: int, dims: MoEDims) -> int:
+    cap = int(t_local * dims.top_k * dims.capacity_factor / dims.n_experts) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def _expert_ffn(w_gate, w_up, w_down, h):
+    """h: (E_local, C, d) -> (E_local, C, d); SwiGLU per expert (MXU einsums)."""
+    dt_ = h.dtype
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate.astype(dt_)))
+    u = jnp.einsum("ecd,edf->ecf", h, w_up.astype(dt_))
+    return jnp.einsum("ecf,efd->ecd", g * u, w_down.astype(dt_))
+
+
+def _moe_local(
+    x_flat: jax.Array,
+    gates: jax.Array,
+    ids: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    e_start: jax.Array,
+    n_experts_total: int,
+    capacity: int,
+) -> jax.Array:
+    """Sort+scatter MoE over the local expert slice [e_start, e_start+E_local).
+
+    x_flat: (T, d); gates/ids: (T, k); w_*: (E_local, ...).  Returns the local
+    partial output (T, d) — zeros for tokens whose experts live elsewhere.
+    """
+    t, d = x_flat.shape
+    k = ids.shape[1]
+    e_local = w_gate.shape[0]
+    ids_flat = ids.reshape(-1)  # (T*k,)
+    gates_flat = gates.reshape(-1)
+
+    # Stable sort by expert id; position-in-expert via cumsum over a small
+    # (T*k, ) int workload (never a (T, E) one-hot).
+    order = jnp.argsort(ids_flat, stable=True)
+    sorted_ids = ids_flat[order]
+    # counts per expert (global expert numbering), exclusive prefix.
+    counts = jnp.bincount(sorted_ids, length=n_experts_total)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(t * k) - starts[sorted_ids]
+
+    local = (sorted_ids >= e_start) & (sorted_ids < e_start + e_local)
+    fits = pos_in_expert < capacity
+    valid = local & fits
+    slot = jnp.where(
+        valid, (sorted_ids - e_start) * capacity + pos_in_expert, e_local * capacity
+    )  # invalid -> one-past-end dump slot
+
+    # Memory discipline: ONLY (E_local*C)-sized f32/bf16 tensors exist.  The
+    # (T*k, d) "sorted tokens" tensor (7.5 GB for kimi's train_4k) is avoided
+    # by building integer slot->token / slot->gate maps (int32, tiny) and
+    # gathering straight into the buffers.
+    token_idx = order // k  # original token of each routed slot
+    slot_token = jnp.zeros((e_local * capacity + 1,), jnp.int32).at[slot].set(
+        jnp.where(valid, token_idx, 0).astype(jnp.int32)
+    )
+    slot_gate = jnp.zeros((e_local * capacity + 1,), jnp.float32).at[slot].set(
+        jnp.where(valid, gates_flat[order], 0.0)
+    )  # zero gate on the dump slot and on unfilled capacity slots
+    buffers = x_flat[slot_token[:-1]]  # (E_local*C, d) gather
+    h = _expert_ffn(w_gate, w_up, w_down, buffers.reshape(e_local, capacity, d))
+    h = h.reshape(-1, d) * slot_gate[:-1, None].astype(x_flat.dtype)
+    # Combine: scatter-add each slot's weighted output back to its token.
+    out = jnp.zeros((t, d), x_flat.dtype).at[slot_token[:-1]].add(h)
+    return out
+
+
+def _moe_dense_local(x_flat, gates, ids, w_gate, w_up, w_down, e_start):
+    """Decode path: run all local experts on all tokens, router-masked."""
+    e_local = w_gate.shape[0]
+    t, d = x_flat.shape
+    h = jnp.broadcast_to(x_flat[None], (e_local, t, d))
+    y = _expert_ffn(w_gate, w_up, w_down, h)  # (E_local, T, d)
+    local_expert = ids[None, :, :] == (
+        jnp.arange(e_local)[:, None, None] + e_start
+    )  # (E_local, T, k)
+    w = jnp.sum(
+        jnp.where(local_expert, gates[None, :, :], 0.0), axis=-1
+    )  # (E_local, T)
+    return jnp.einsum("etd,et->td", y, w.astype(x_flat.dtype))
+
+
+def moe_apply(
+    params: Params,
+    dims: MoEDims,
+    x: jax.Array,
+    mesh: jax.sharding.Mesh | None = None,
+    batch_axes: tuple[str, ...] = ("data",),
+    expert_axis: str = "model",
+    dense_path: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """MoE FFN.  x: (B, S, d) -> (out (B, S, d), aux loss scalar).
+
+    With ``mesh``: expert-parallel via partial-manual shard_map (experts over
+    ``expert_axis``, tokens over ``batch_axes``; d_model replicated on the
+    expert axis).  Without: single-shard local compute (smoke tests).
+    """
+    b, s, d = x.shape
+    if mesh is None:
+        x_flat = x.reshape(-1, d)
+        gates, ids, aux = route(params, dims, x_flat)
+        if dense_path:
+            out = _moe_dense_local(
+                x_flat, gates, ids, params["w_gate"], params["w_up"],
+                params["w_down"], jnp.asarray(0),
+            )
+        else:
+            out = _moe_local(
+                x_flat, gates, ids, params["w_gate"], params["w_up"],
+                params["w_down"], jnp.asarray(0), dims.n_experts,
+                _capacity(x_flat.shape[0], dims),
+            )
+        return out.reshape(b, s, d), aux
+
+    ep = mesh.shape[expert_axis]
+    assert dims.n_experts % ep == 0, (dims.n_experts, ep)
+    dp = 1
+    for ax in batch_axes:
+        dp *= mesh.shape[ax]
+    t_local = (b // dp) * s
+    capacity = _capacity(t_local, dims)
+
+    def body(x_shard, router, w_gate, w_up, w_down):
+        bl, sl, _ = x_shard.shape
+        x_flat = x_shard.reshape(-1, d)
+        gates, ids, aux = route({"router": router}, dims, x_flat)
+        idx = jax.lax.axis_index(expert_axis)
+        e_start = idx * (dims.n_experts // ep)
+        if dense_path:
+            out = _moe_dense_local(x_flat, gates, ids, w_gate, w_up, w_down, e_start)
+        else:
+            out = _moe_local(
+                x_flat, gates, ids, w_gate, w_up, w_down, e_start,
+                dims.n_experts, capacity,
+            )
+        # Combine expert contributions across shards — the only collective.
+        out = jax.lax.psum(out, expert_axis)
+        aux = jax.lax.psum(aux, expert_axis) / ep
+        return out.reshape(bl, sl, d), aux
+
+    # Full-manual over (batch axes + expert axis).  When the batch is not
+    # divisible (e.g. B=1 long-context decode) tokens replicate across the
+    # data axes and every data shard computes identically — out_spec stays
+    # replicated there, which holds by construction.
+    shardable = b % dp == 0 and b >= dp
+    batch_spec = P(batch_axes if shardable else None, None, None)
+    if not shardable:
+        t_local = b * s
+        capacity = _capacity(t_local, dims)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(batch_spec, P(), P(expert_axis), P(expert_axis), P(expert_axis)),
+        out_specs=(batch_spec, P()),
+        axis_names={expert_axis, *batch_axes},
+        check_vma=False,
+    )
+    return fn(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+
+
+def router_init_from_ckm(centroids: jax.Array, d_model: int) -> jax.Array:
+    """Router weights from compressively-clustered hidden states (paper tie-in).
+
+    ``centroids``: (E, d) CKM centroids of a stream of token activations (see
+    train/monitor.py).  The router logit for expert e is the inner product
+    with its centroid — k-means-style cluster assignment as routing prior.
+    """
+    c = centroids / jnp.maximum(jnp.linalg.norm(centroids, axis=1, keepdims=True), 1e-6)
+    return c.T.astype(jnp.float32)  # (d, E)

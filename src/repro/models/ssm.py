@@ -1,0 +1,394 @@
+"""Recurrent sequence mixers: Mamba (selective SSM), mLSTM, sLSTM.
+
+TPU adaptation notes (DESIGN.md §3):
+- Mamba's diagonal recurrence runs as a ``lax.scan`` over fixed-size chunks
+  with a ``lax.associative_scan`` *within* each chunk — the (B, S, d_in, d_state)
+  tensor never materialises for the full sequence, only (B, chunk, d_in, d_state).
+- mLSTM uses the chunkwise gated-linear-attention form: O(chunk^2) intra-chunk
+  attention on the MXU + an O(1) carried matrix state between chunks.  Gate
+  exponents are computed as *differences* (always <= 0 after clamping), so no
+  unstable exp(+big) ever appears.  The exponential input gate of the paper is
+  replaced by a clamped sigmoid gate for bf16 stability (noted in DESIGN.md).
+- sLSTM has no parallel form (by design, per the xLSTM paper): the W x term is
+  precomputed for the whole sequence in one matmul; only the h R recurrence
+  runs sequentially.  This shows up honestly in the roofline (§Perf).
+
+All mixers expose ``init``, ``apply`` (full sequence -> outputs + final state)
+and ``step`` (single-token decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM), as in Jamba's Mamba layers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(self.d_model // 16, 1)
+
+
+def init_mamba(key, dims: MambaDims) -> Params:
+    ks = jax.random.split(key, 6)
+    di, ds, dr = dims.d_inner, dims.d_state, dims.dt_rank
+    return {
+        "in_proj": _dense_init(ks[0], (dims.d_model, 2 * di)),
+        "conv_w": jax.random.normal(ks[1], (dims.d_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (di, dr + 2 * ds)),
+        "dt_proj": _dense_init(ks[3], (dr, di)),
+        "dt_bias": jnp.full((di,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+        ),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, dims.d_model)),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over time.  x: (B, S, di); w: (dconv, di).
+
+    ``state``: (B, dconv-1, di) trailing context from a previous segment.
+    Returns (y, new_state).
+    """
+    dconv = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dconv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(dconv)
+    )
+    new_state = xp[:, -(dconv - 1) :, :]
+    return y + b.astype(x.dtype), new_state
+
+
+def _ssm_scan_chunked(dt, b_in, c_in, xc, a, h0, chunk):
+    """Selective-SSM recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    y_t = h_t . C_t — chunked so the (B, *, di, ds) tensors only ever exist
+    for one chunk at a time (built lazily inside the scan body).
+
+    dt: (B,S,di) f32; b_in,c_in: (B,S,ds); xc: (B,S,di); a: (di,ds) f32.
+    Returns (y (B,S,di) f32, h_final (B,di,ds) f32).
+    """
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    def chunk_body(h, xs_):
+        dt_c, b_c, c_c, x_c = xs_  # (B,c,di), (B,c,ds), (B,c,ds), (B,c,di)
+        a_bar = jnp.exp(dt_c[..., None] * a)  # (B,c,di,ds) — chunk only
+        bx = (
+            dt_c[..., None]
+            * b_c[:, :, None, :].astype(jnp.float32)
+            * x_c[..., None].astype(jnp.float32)
+        )
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+        h_all = a_cum * h[:, None] + b_cum  # (B,c,di,ds)
+        y = jnp.sum(h_all * c_c[:, :, None, :].astype(jnp.float32), axis=-1)
+        return h_all[:, -1], y
+
+    b, s = dt.shape[0], dt.shape[1]
+    nch = s // chunk
+    split = lambda t: t.reshape(b, nch, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0, (split(dt), split(b_in), split(c_in), split(xc))
+    )
+    y_seq = ys.swapaxes(0, 1).reshape(b, s, -1)
+    return y_seq, h_final
+
+
+def mamba_apply(
+    params: Params, dims: MambaDims, x: jax.Array, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    """Full-sequence Mamba mixer.  x: (B, S, d_model) -> (out, final state)."""
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    di, ds, dr = dims.d_inner, dims.d_state, dims.dt_rank
+    xz = x @ params["in_proj"].astype(dt_)
+    xs_, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, conv_state = _causal_conv(xs_, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ params["x_proj"].astype(dt_)
+    dt_raw, b_ssm, c_ssm = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw @ params["dt_proj"].astype(dt_) + params["dt_bias"].astype(dt_)
+    ).astype(jnp.float32)  # (B, S, di)
+    a = -jnp.exp(params["a_log"])  # (di, ds)
+    h0 = (
+        jnp.zeros((b, di, ds), jnp.float32)
+        if state is None
+        else state["ssm"].astype(jnp.float32)
+    )
+    chunk = min(dims.chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 on padding -> a_bar = 1, bx = 0: state passes through unchanged.
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ssm = jnp.pad(b_ssm, ((0, 0), (0, pad), (0, 0)))
+        c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+    y, h_final = _ssm_scan_chunked(dt, b_ssm, c_ssm, xc_p, a, h0, chunk)
+    y = y[:, :s].astype(dt_) + params["d_skip"].astype(dt_) * xc
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, {"conv": conv_state, "ssm": h_final}
+
+
+def mamba_init_state(dims: MambaDims, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+        "ssm": jnp.zeros((batch, dims.d_inner, dims.d_state), jnp.float32),
+    }
+
+
+def mamba_step(
+    params: Params, dims: MambaDims, x: jax.Array, state: Params
+) -> tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B, 1, d_model)."""
+    out, new_state = mamba_apply(params, dims, x, state)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell), chunkwise gated linear attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMDims:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def init_mlstm(key, dims: MLSTMDims) -> Params:
+    ks = jax.random.split(key, 7)
+    d, di, h = dims.d_model, dims.d_inner, dims.n_heads
+    return {
+        "up_proj": _dense_init(ks[0], (d, di)),
+        "wq": _dense_init(ks[1], (di, di)),
+        "wk": _dense_init(ks[2], (di, di)),
+        "wv": _dense_init(ks[3], (di, di)),
+        "w_gates": _dense_init(ks[4], (d, 2 * h)),  # (input, forget) per head
+        "w_ogate": _dense_init(ks[5], (d, di)),
+        "down_proj": _dense_init(ks[6], (di, d)),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, state):
+    """One chunk of the stabilised GLA recurrence.
+
+    q,k,v: (B, c, H, hd);  log_f, log_i: (B, c, H) f32 (log_f <= 0).
+    state: {"C": (B,H,hd,hd) f32, "n": (B,H,hd) f32}.
+    """
+    bsz, c, h, hd = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    cum_f = jnp.cumsum(log_f, axis=1)  # (B, c, H), inclusive
+    # Intra-chunk: gate(i,j) = exp(cum_f[i] - cum_f[j] + log_i[j]) for j <= i.
+    # Exponent <= 0 (log_f <= 0, log_i <= 0) -> no overflow, computed directly.
+    expo = cum_f[:, :, None, :] - cum_f[:, None, :, :] + log_i[:, None, :, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    gate = jnp.where(mask[None, :, :, None], jnp.exp(expo), 0.0)  # (B,c,c,H)
+    scores = jnp.einsum("bihd,bjhd->bijh", qf, kf) * gate
+    h_intra = jnp.einsum("bijh,bjhd->bihd", scores, vf)
+    n_intra = jnp.einsum("bijh,bjhd->bihd", gate, kf)
+    # Inter-chunk: decayed read of the carried state.
+    decay_q = jnp.exp(cum_f)  # (B, c, H)
+    h_inter = jnp.einsum("bihd,bhde->bihe", qf, state["C"]) * decay_q[..., None]
+    n_inter = state["n"][:, None] * decay_q[..., None]
+    # Normaliser: h / max(|n . q|, 1)  (xLSTM normalised read-out).
+    n_tot = n_intra + n_inter
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_tot * qf, axis=-1, keepdims=True)), 1.0)
+    out = (h_intra + h_inter) / denom
+    # State update to the end of the chunk (exponents again <= 0).
+    decay_all = cum_f[:, -1:, :] - cum_f + log_i  # (B, c, H)
+    wgt = jnp.exp(decay_all)
+    c_new = state["C"] * jnp.exp(cum_f[:, -1])[..., None, None] + jnp.einsum(
+        "bjh,bjhd,bjhe->bhde", wgt, kf, vf
+    )
+    n_new = state["n"] * jnp.exp(cum_f[:, -1])[..., None] + jnp.einsum(
+        "bjh,bjhd->bhd", wgt, kf
+    )
+    return out, {"C": c_new, "n": n_new}
+
+
+def mlstm_apply(
+    params: Params, dims: MLSTMDims, x: jax.Array, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    h, hd, di = dims.n_heads, dims.head_dim, dims.d_inner
+    u = jax.nn.silu(x @ params["up_proj"].astype(dt_))
+    q = (u @ params["wq"].astype(dt_)).reshape(b, s, h, hd)
+    k = (u @ params["wk"].astype(dt_)).reshape(b, s, h, hd) / jnp.sqrt(hd).astype(dt_)
+    v = (u @ params["wv"].astype(dt_)).reshape(b, s, h, hd)
+    gates = (x @ params["w_gates"].astype(dt_)).astype(jnp.float32)
+    log_i = jax.nn.log_sigmoid(gates[..., :h])  # clamped input gate (<=0)
+    log_f = jnp.maximum(jax.nn.log_sigmoid(gates[..., h:]), -8.0)
+
+    if state is None:
+        state = mlstm_init_state(dims, b)
+    c = min(dims.chunk, s)
+    pad = (-s) % c
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nch = q.shape[1] // c
+
+    def body(st, xs_):
+        qc, kc, vc, lfc, lic = xs_
+        out, st = _mlstm_chunk(qc, kc, vc, lfc, lic, st)
+        return st, out
+
+    split = lambda t: t.reshape(b, nch, c, *t.shape[2:]).swapaxes(0, 1)
+    state, outs = jax.lax.scan(
+        body, state, (split(q), split(k), split(v), split(log_f), split(log_i))
+    )
+    out = outs.swapaxes(0, 1).reshape(b, nch * c, h, hd)[:, :s]
+    out = out.reshape(b, s, di).astype(dt_)
+    ogate = jax.nn.sigmoid(x @ params["w_ogate"].astype(dt_))
+    return (out * ogate) @ params["down_proj"].astype(dt_), state
+
+
+def mlstm_init_state(dims: MLSTMDims, batch: int) -> Params:
+    h, hd = dims.n_heads, dims.head_dim
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+def mlstm_step(params, dims: MLSTMDims, x, state):
+    """Single-token decode: the chunkwise path with chunk == 1."""
+    out, state = mlstm_apply(params, dims, x, state)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar cell) — sequential by construction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMDims:
+    d_model: int
+    heads: int = 4  # block-diagonal recurrence, as in the xLSTM paper
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.heads
+
+
+def init_slstm(key, dims: SLSTMDims) -> Params:
+    k1, k2 = jax.random.split(key)
+    d, h, dh = dims.d_model, dims.heads, dims.head_dim
+    return {
+        "w": _dense_init(k1, (d, 4 * d)),  # i, f, z, o from x (precomputable)
+        # Block-diagonal recurrent matrix (xLSTM §"sLSTM": heads don't mix
+        # through R): 4x fewer recurrent weights AND 4x less of the per-step
+        # HBM re-read that dominates this arch's roofline (EXPERIMENTS §Perf).
+        "r": _dense_init(k2, (h, dh, 4 * dh), in_axis=1) * 0.1,
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+def _slstm_cell(params, wx_t, st):
+    """One timestep.  wx_t: (B, 4d) precomputed W x_t.  st: dict of (B, d)."""
+    d = st["h"].shape[-1]
+    r = params["r"]
+    h_heads = st["h"].reshape(st["h"].shape[0], r.shape[0], r.shape[1])
+    rec = jnp.einsum(
+        "bhd,hde->bhe", h_heads.astype(wx_t.dtype), r.astype(wx_t.dtype)
+    )  # (B, H, 4*dh)
+    # reorder per-head [i|f|z|o] blocks into the (B, 4d) layout of W x.
+    rec = rec.reshape(rec.shape[0], r.shape[0], 4, -1)  # (B, H, 4, dh)
+    rec = rec.transpose(0, 2, 1, 3).reshape(rec.shape[0], 4 * d)
+    gates = (wx_t + rec).astype(jnp.float32) + params["b"]
+    i_log, f_log, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_log)
+    m_new = jnp.maximum(f_log + st["m"], i_log)
+    i_g = jnp.exp(i_log - m_new)
+    f_g = jnp.exp(f_log + st["m"] - m_new)
+    c_new = f_g * st["c"] + i_g * jnp.tanh(z_raw)
+    n_new = jnp.maximum(f_g * st["n"] + i_g, 1e-6)
+    h_new = jax.nn.sigmoid(o_raw) * c_new / n_new
+    return {"h": h_new.astype(st["h"].dtype), "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_apply(
+    params: Params, dims: SLSTMDims, x: jax.Array, state: Params | None = None
+) -> tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    wx = x @ params["w"].astype(x.dtype)  # (B, S, 4d): one big MXU matmul
+    if state is None:
+        state = slstm_init_state(dims, b, x.dtype)
+
+    def body(st, wx_t):
+        st = _slstm_cell(params, wx_t, st)
+        return st, st["h"]
+
+    # Checkpoint the cell: the backward scan then saves only the (h,c,n,m)
+    # carry per step and recomputes the gate nonlinearities — roughly halves
+    # the stacked f32 residual traffic that dominates this arch (§Perf).
+    state, hs = jax.lax.scan(jax.checkpoint(body), state, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x.dtype), state
+
+
+def slstm_init_state(dims: SLSTMDims, batch: int, dtype) -> Params:
+    d = dims.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_step(params, dims: SLSTMDims, x, state):
+    """x: (B, 1, d)."""
+    wx = x[:, 0] @ params["w"].astype(x.dtype)
+    state = _slstm_cell(params, wx, state)
+    return state["h"][:, None, :].astype(x.dtype), state

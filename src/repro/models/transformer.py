@@ -1,0 +1,628 @@
+"""The model stack: one flexible decoder (+ optional encoder) that realises
+all 10 assigned architectures via the (mixer, mlp) layer pattern in
+``ModelConfig`` (see configs/base.py).
+
+Layer grouping: ``n_layers // period`` identical groups are applied with
+``lax.scan`` (stacked params -> O(1) compile time in depth); any remainder
+layers are unrolled.  Serving caches mirror the same (groups, rest) structure.
+
+Modes
+-----
+- ``forward``      : full-sequence (training / encoder / prefill backbone)
+- ``prefill``      : forward + cache construction for decode
+- ``decode_step``  : one token against the cache (ring buffers for sliding-
+                     window layers, CKM-compressed KV for ``long_context="ckm"``)
+
+Modality frontends are STUBS per the assignment: ``vlm`` consumes precomputed
+patch embeddings (prepended to the token stream), ``audio`` consumes
+precomputed frames into the encoder.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Dims helpers
+# ---------------------------------------------------------------------------
+
+
+def attn_dims(cfg: ModelConfig, mixer: str) -> L.AttnDims:
+    return L.AttnDims(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_,
+        window=cfg.window if mixer == "local" else 0,
+        rope_theta=cfg.rope_theta,
+        q_block=cfg.q_block,
+        score_dtype=cfg.score_dtype,
+    )
+
+
+def mamba_dims(cfg: ModelConfig) -> ssm.MambaDims:
+    return ssm.MambaDims(
+        cfg.d_model, cfg.ssm_state, cfg.ssm_conv, cfg.ssm_expand, cfg.scan_chunk
+    )
+
+
+def mlstm_dims(cfg: ModelConfig) -> ssm.MLSTMDims:
+    return ssm.MLSTMDims(cfg.d_model, cfg.mlstm_heads, cfg.ssm_expand, cfg.scan_chunk)
+
+
+def moe_dims(cfg: ModelConfig) -> moe_mod.MoEDims:
+    return moe_mod.MoEDims(
+        cfg.d_model, cfg.d_ff, cfg.moe_experts, cfg.moe_top_k,
+        cfg.moe_capacity_factor,
+    )
+
+
+def _kind(cfg: ModelConfig, layer_idx: int) -> tuple[str, str]:
+    p = cfg.period
+    return cfg.mixer_pattern[layer_idx % p], cfg.mlp_pattern[layer_idx % p]
+
+
+def _moe_batch_axes(mesh) -> tuple[str, ...]:
+    if mesh is None:
+        return ("data",)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _sharder(mesh, cfg: ModelConfig | None = None):
+    from repro.parallel.sharding import activation_sharder
+
+    seq_shard = cfg is not None and cfg.d_model >= 4096
+    return activation_sharder(mesh, seq_shard=seq_shard)
+
+
+# ---------------------------------------------------------------------------
+# Single layer: init / forward / decode-step
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig, mixer: str, mlp_kind: str, cross: bool) -> Params:
+    keys = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_rmsnorm(cfg.d_model)}
+    if mixer in ("attn", "local"):
+        p["mixer"] = L.init_attention(keys[0], attn_dims(cfg, mixer))
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(keys[0], mamba_dims(cfg))
+    elif mixer == "mlstm":
+        p["mixer"] = ssm.init_mlstm(keys[0], mlstm_dims(cfg))
+    elif mixer == "slstm":
+        p["mixer"] = ssm.init_slstm(keys[0], ssm.SLSTMDims(cfg.d_model, cfg.n_heads))
+    else:
+        raise ValueError(mixer)
+    if cross:
+        p["norm_cross"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = L.init_attention(keys[1], attn_dims(cfg, "attn"))
+    if mlp_kind in ("dense", "moe"):
+        p["norm2"] = L.init_rmsnorm(cfg.d_model)
+        p["mlp"] = (
+            L.init_mlp(keys[2], cfg.d_model, cfg.d_ff)
+            if mlp_kind == "dense"
+            else moe_mod.init_moe(keys[2], moe_dims(cfg))
+        )
+    return p
+
+
+def layer_forward(
+    p: Params,
+    cfg: ModelConfig,
+    mixer: str,
+    mlp_kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    mesh,
+    causal: bool = True,
+    enc_kv=None,
+    collect_cache: bool = False,
+):
+    """Pre-norm residual layer.  Returns (x, aux_loss, cache_or_None)."""
+    shard = _sharder(mesh, cfg)
+    x = shard(x, "resid")
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache = None
+    if mixer in ("attn", "local"):
+        dims = attn_dims(cfg, mixer)
+        if collect_cache:
+            out, (k, v) = L.attention_apply(
+                p["mixer"], dims, h, positions, causal, return_kv=True, shard=shard
+            )
+            cache = {"k": k, "v": v}
+        else:
+            out = L.attention_apply(
+                p["mixer"], dims, h, positions, causal, shard=shard
+            )
+    elif mixer == "mamba":
+        out, state = ssm.mamba_apply(p["mixer"], mamba_dims(cfg), h)
+        cache = state if collect_cache else None
+    elif mixer == "mlstm":
+        out, state = ssm.mlstm_apply(p["mixer"], mlstm_dims(cfg), h)
+        cache = state if collect_cache else None
+    elif mixer == "slstm":
+        out, state = ssm.slstm_apply(p["mixer"], ssm.SLSTMDims(cfg.d_model, cfg.n_heads), h)
+        cache = state if collect_cache else None
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if enc_kv is not None:
+        h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + L.cross_attention_apply(p["cross"], attn_dims(cfg, "attn"), h, enc_kv)
+    aux = jnp.zeros((), jnp.float32)
+    if mlp_kind == "dense":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, shard=shard)
+    elif mlp_kind == "moe":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        out, aux = moe_mod.moe_apply(
+            p["mlp"], moe_dims(cfg), h, mesh=mesh, batch_axes=_moe_batch_axes(mesh)
+        )
+        x = x + out
+    x = shard(x, "resid")
+    return x, aux, cache
+
+
+def layer_step(
+    p: Params,
+    cfg: ModelConfig,
+    mixer: str,
+    mlp_kind: str,
+    x: jax.Array,
+    cache: Params,
+    index: jax.Array,
+    mesh,
+):
+    """Single-token decode.  x: (B, 1, d).  Returns (x, new_cache)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    enc_kv = None
+    if "cross_k" in cache:
+        enc_kv = (cache["cross_k"], cache["cross_v"])
+    if mixer in ("attn", "local"):
+        dims = attn_dims(cfg, mixer)
+        if "ck" in cache:  # CKM-compressed global attention (long_context)
+            from repro.serve.kv_clustering import attention_decode_compressed
+
+            out, kv_cache = attention_decode_compressed(
+                p["mixer"], dims, h, cache, index
+            )
+        else:
+            out, ck, cv = L.attention_decode(
+                p["mixer"], dims, h, cache["k"], cache["v"], index
+            )
+            kv_cache = {"k": ck, "v": cv}
+        cache = {**cache, **kv_cache}
+    elif mixer == "mamba":
+        out, st = ssm.mamba_step(p["mixer"], mamba_dims(cfg), h, cache["state"])
+        cache = {**cache, "state": st}
+    elif mixer == "mlstm":
+        out, st = ssm.mlstm_step(p["mixer"], mlstm_dims(cfg), h, cache["state"])
+        cache = {**cache, "state": st}
+    elif mixer == "slstm":
+        out, st = ssm.slstm_step(p["mixer"], ssm.SLSTMDims(cfg.d_model, cfg.n_heads), h, cache["state"])
+        cache = {**cache, "state": st}
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if enc_kv is not None:
+        h = L.rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + L.cross_attention_apply(p["cross"], attn_dims(cfg, "attn"), h, enc_kv)
+    if mlp_kind == "dense":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h)
+    elif mlp_kind == "moe":
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        out, _ = moe_mod.moe_apply(
+            p["mlp"], moe_dims(cfg), h, mesh=mesh, dense_path=True,
+            batch_axes=_moe_batch_axes(mesh),
+        )
+        x = x + out
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    period = cfg.period
+    n_groups = cfg.n_layers // period
+    n_rest = cfg.n_layers % period
+    cross = cfg.encoder_layers > 0
+
+    def init_group(k):
+        ks = jax.random.split(k, period)
+        return {
+            str(i): init_layer(
+                ks[i], cfg, cfg.mixer_pattern[i], cfg.mlp_pattern[i], cross
+            )
+            for i in range(period)
+        }
+
+    params: Params = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "groups": jax.vmap(init_group)(jax.random.split(keys[1], n_groups)),
+    }
+    if n_rest:
+        ks = jax.random.split(keys[2], n_rest)
+        params["rest"] = {
+            str(i): init_layer(ks[i], cfg, *_kind(cfg, n_groups * period + i), cross)
+            for i in range(n_rest)
+        }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_lm_head(keys[3], cfg.d_model, cfg.vocab_size)
+    if cfg.encoder_layers:
+        params["encoder"] = {
+            "groups": jax.vmap(
+                lambda k: init_layer(k, cfg, "attn", "dense", cross=False)
+            )(jax.random.split(keys[4], cfg.encoder_layers)),
+            "final_norm": L.init_rmsnorm(cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill backbone)
+# ---------------------------------------------------------------------------
+
+
+def _encoder_forward(params, cfg: ModelConfig, frames: jax.Array, mesh):
+    """Whisper encoder on precomputed (stub) conv features (B, F, d)."""
+    x = frames
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+
+    def body(x, p):
+        x, _, _ = layer_forward(p, cfg, "attn", "dense", x, pos, mesh, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["groups"])
+    return L.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict, dtype):
+    """Token (+ frontend) embedding.  Returns (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, dtype)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dtype)
+    enc_out = None
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(dtype)  # (B, F, d) stub embeddings
+        x = jnp.concatenate([patches, x], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    return x, positions, enc_out
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    mesh=None,
+    dtype=jnp.bfloat16,
+    remat: str = "none",
+):
+    """Full-sequence forward.  Returns (final hidden (B, S_total, d), aux)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, dtype)
+    cross = cfg.encoder_layers > 0
+    enc_out = None
+    if cross:
+        enc_out = _encoder_forward(params, cfg, batch["frames"].astype(dtype), mesh)
+    period = cfg.period
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for i in range(period):
+            enc_kv = None
+            if cross:
+                enc_kv = L.encoder_kv(
+                    gparams[str(i)]["cross"], attn_dims(cfg, "attn"), enc_out
+                )
+            x, a, _ = layer_forward(
+                gparams[str(i)], cfg, cfg.mixer_pattern[i], cfg.mlp_pattern[i],
+                x, positions, mesh, causal=True, enc_kv=enc_kv,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    body = group_body
+    if remat == "full":
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False,
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+    if "rest" in params:
+        n_groups = cfg.n_layers // period
+        for i in range(cfg.n_layers % period):
+            enc_kv = None
+            if cross:
+                enc_kv = L.encoder_kv(
+                    params["rest"][str(i)]["cross"], attn_dims(cfg, "attn"), enc_out
+                )
+            x, a, _ = layer_forward(
+                params["rest"][str(i)], cfg, *_kind(cfg, n_groups * period + i),
+                x, positions, mesh, causal=True, enc_kv=enc_kv,
+            )
+            aux = aux + a
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.lm_head(params["lm_head"], x)
+
+
+def chunked_ce_loss(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    labels: jax.Array,
+    chunk: int = 256,
+) -> jax.Array:
+    """Cross-entropy over seq chunks: the (B, S, V) logits never materialise.
+
+    labels: (B, S_total) int32, negative = ignored (frontend/pad positions).
+    """
+    b, s, d = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    nch = x.shape[1] // chunk
+    xs = x.reshape(b, nch, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, nch, chunk).swapaxes(0, 1)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = logits_fn(params, cfg, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[
+            ..., 0
+        ]
+        mask = (lc >= 0).astype(jnp.float32)
+        return (acc[0] + jnp.sum((logz - gold) * mask), acc[1] + jnp.sum(mask)), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xs, ls))
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    mesh=None,
+    dtype=jnp.bfloat16,
+    remat: str = "none",
+    aux_weight: float = 0.01,
+) -> jax.Array:
+    x, aux = forward(params, cfg, batch, mesh, dtype, remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        f = batch["patches"].shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], f), -100, labels.dtype), labels], axis=1
+        )
+    loss = chunked_ce_loss(params, cfg, x, labels)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode step
+# ---------------------------------------------------------------------------
+
+CKM_KV_CENTROIDS = 4096  # compressed-KV size for long_context="ckm"
+CKM_KV_RECENT = 1024  # raw ring of most recent tokens alongside centroids
+
+
+def _layer_cache_spec(cfg: ModelConfig, mixer: str, batch: int, cache_len: int,
+                      mode: str, dtype):
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    if mixer == "local":
+        w = min(cfg.window, cache_len)
+        return {
+            "k": jnp.zeros((batch, w, kvh, hd), dtype),
+            "v": jnp.zeros((batch, w, kvh, hd), dtype),
+        }
+    if mixer == "attn":
+        if mode == "ckm":
+            return {
+                "ck": jnp.zeros((batch, CKM_KV_CENTROIDS, kvh, hd), dtype),
+                "cv": jnp.zeros((batch, CKM_KV_CENTROIDS, kvh, hd), dtype),
+                "clogw": jnp.zeros((batch, CKM_KV_CENTROIDS, kvh), jnp.float32),
+                "k": jnp.zeros((batch, CKM_KV_RECENT, kvh, hd), dtype),
+                "v": jnp.zeros((batch, CKM_KV_RECENT, kvh, hd), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, cache_len, kvh, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, kvh, hd), dtype),
+        }
+    if mixer == "mamba":
+        return {"state": ssm.mamba_init_state(mamba_dims(cfg), batch, dtype)}
+    if mixer == "mlstm":
+        return {"state": ssm.mlstm_init_state(mlstm_dims(cfg), batch)}
+    if mixer == "slstm":
+        return {"state": ssm.slstm_init_state(ssm.SLSTMDims(cfg.d_model, cfg.n_heads), batch, dtype)}
+    raise ValueError(mixer)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, mode: str = "full",
+    dtype=jnp.bfloat16,
+) -> Params:
+    """Zero cache pytree mirroring the (groups, rest) param structure."""
+    period = cfg.period
+    n_groups = cfg.n_layers // period
+    cross = cfg.encoder_layers > 0
+
+    def one(mixer):
+        c = _layer_cache_spec(cfg, mixer, batch, cache_len, mode, dtype)
+        if cross:
+            c["cross_k"] = jnp.zeros(
+                (batch, cfg.frontend_len, cfg.n_kv_heads, cfg.head_dim_), dtype
+            )
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+
+    group_cache = {str(i): one(cfg.mixer_pattern[i]) for i in range(period)}
+    cache: Params = {
+        "groups": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups, *x.shape)), group_cache
+        ),
+    }
+    if cfg.n_layers % period:
+        cache["rest"] = {
+            str(i): one(cfg.mixer_pattern[(n_groups * period + i) % period])
+            for i in range(cfg.n_layers % period)
+        }
+    return cache
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    cache_len: int,
+    mesh=None,
+    dtype=jnp.bfloat16,
+):
+    """Process the prompt; returns (last-position logits, cache, index)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, dtype)
+    s_total = x.shape[1]
+    assert cache_len >= s_total, (cache_len, s_total)
+    cross = cfg.encoder_layers > 0
+    enc_out = None
+    if cross:
+        enc_out = _encoder_forward(params, cfg, batch["frames"].astype(dtype), mesh)
+    period = cfg.period
+
+    def to_cache(mixer, raw, p_layer):
+        """Convert layer_forward's collected kv/state into decode cache form."""
+        if mixer == "attn":
+            k, v = raw["k"], raw["v"]
+            pad = cache_len - k.shape[1]
+            c = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+        elif mixer == "local":
+            w = min(cfg.window, cache_len)
+            k, v = raw["k"], raw["v"]
+            s = k.shape[1]
+            if s >= w:
+                # last w entries, placed at their ring slots (pos % w).
+                tail_k, tail_v = k[:, s - w :], v[:, s - w :]
+                pos = (jnp.arange(s - w, s)) % w
+                order = jnp.argsort(pos)
+                c = {"k": tail_k[:, order], "v": tail_v[:, order]}
+            else:
+                c = {
+                    "k": jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0))),
+                    "v": jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0))),
+                }
+        else:
+            c = {"state": raw}
+        if cross:
+            ck, cv = L.encoder_kv(p_layer["cross"], attn_dims(cfg, "attn"), enc_out)
+            c["cross_k"], c["cross_v"] = ck, cv
+        return c
+
+    def group_body(x, gparams):
+        caches = {}
+        for i in range(period):
+            enc_kv = None
+            if cross:
+                enc_kv = L.encoder_kv(
+                    gparams[str(i)]["cross"], attn_dims(cfg, "attn"), enc_out
+                )
+            x, _, raw = layer_forward(
+                gparams[str(i)], cfg, cfg.mixer_pattern[i], cfg.mlp_pattern[i],
+                x, positions, mesh, causal=True, enc_kv=enc_kv, collect_cache=True,
+            )
+            caches[str(i)] = to_cache(cfg.mixer_pattern[i], raw, gparams[str(i)])
+        return x, caches
+
+    x, group_caches = jax.lax.scan(group_body, x, params["groups"])
+    cache: Params = {"groups": group_caches}
+    if "rest" in params:
+        n_groups = cfg.n_layers // period
+        rest = {}
+        for i in range(cfg.n_layers % period):
+            li = n_groups * period + i
+            enc_kv = None
+            if cross:
+                enc_kv = L.encoder_kv(
+                    params["rest"][str(i)]["cross"], attn_dims(cfg, "attn"), enc_out
+                )
+            x, _, raw = layer_forward(
+                params["rest"][str(i)], cfg, *_kind(cfg, li), x, positions, mesh,
+                causal=True, enc_kv=enc_kv, collect_cache=True,
+            )
+            rest[str(i)] = to_cache(_kind(cfg, li)[0], raw, params["rest"][str(i)])
+        cache["rest"] = rest
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1:, :])
+    return logits, cache, jnp.asarray(s_total, jnp.int32)
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,
+    cache: Params,
+    index: jax.Array,
+    mesh=None,
+    dtype=jnp.bfloat16,
+):
+    """One decode step.  token: (B, 1) int32; index: () position of token.
+
+    Returns (logits (B, 1, V), new cache).
+    """
+    x = L.embed(params["embed"], token, dtype)
+    x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dtype)
+    period = cfg.period
+
+    def group_body(x, xs_):
+        gparams, gcache = xs_
+        new = {}
+        for i in range(period):
+            x, c = layer_step(
+                gparams[str(i)], cfg, cfg.mixer_pattern[i], cfg.mlp_pattern[i],
+                x, gcache[str(i)], index, mesh,
+            )
+            new[str(i)] = c
+        return x, new
+
+    x, new_group_caches = jax.lax.scan(
+        group_body, x, (params["groups"], cache["groups"])
+    )
+    new_cache: Params = {"groups": new_group_caches}
+    if "rest" in params:
+        n_groups = cfg.n_layers // period
+        rest = {}
+        for i in range(cfg.n_layers % period):
+            li = n_groups * period + i
+            x, c = layer_step(
+                params["rest"][str(i)], cfg, *_kind(cfg, li), x,
+                cache["rest"][str(i)], index, mesh,
+            )
+            rest[str(i)] = c
+        new_cache["rest"] = rest
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache

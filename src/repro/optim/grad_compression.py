@@ -1,0 +1,73 @@
+"""Cross-pod gradient compression with error feedback.
+
+Within a pod, ICI is fast — gradients reduce exactly (GSPMD-inserted
+collectives over the "data"/"model" axes).  ACROSS pods (DCI, ~5-10x slower),
+gradients are quantised to int16 with a shared max-abs scale before the
+exchange; the quantisation error is fed back into the next step (error
+feedback preserves convergence — Karimireddy et al. 2019).  Wire traffic
+halves vs f32; the int16 grid at 8 fractional bits keeps single-step error
+below 2^-8 of max|g| even before feedback.
+
+Mechanics (inside a partial-manual ``shard_map`` over the "pod" axis only —
+data/model sharding stays automatic; check_vma=True, so the cross-pod sum
+must be a *provably invariant* collective, i.e. a psum):
+
+  g_pod   = grad(loss)(params, pod-local batch)      # per-pod gradients
+  gt      = g_pod + err_carry
+  scale   = pmax(max|gt|) / 2^14                     # one scalar psum
+  q       = round(gt / scale) : int16                # |q| <= 2^14
+  sum     = psum(q) * scale                          # 2-byte wire traffic
+  err     = gt - q * scale                           # stays pod-local
+
+|q| <= 2^14 leaves 2 headroom bits: exact for psums of up to 4 pods at full
+scale and safe to 2^15/2^14 = 2 pods worst-case adversarial; in practice
+gradient max-norms across pods are near-identical.  The error state is stored
+with a leading pod axis (sharded P("pod")) so each pod carries ITS residual
+across steps; it checkpoints like everything else.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_QMAX = float(1 << 13)  # 13-bit payload: the int16 psum of 2-4 pods can't wrap
+
+
+def compress_allreduce_tree(grads, err, axis: str):
+    """int16 EF all-reduce of a grad pytree over ``axis`` (call inside
+    shard_map manual on ``axis``).  ``err`` leaves carry a leading pod dim of
+    size 1 (this pod's slice).  Returns (summed grads, new err)."""
+
+    def one(g, e):
+        gt = g.astype(jnp.float32) + e[0]
+        amax = jax.lax.pmax(jnp.max(jnp.abs(gt)), axis)
+        scale = jnp.maximum(amax / _QMAX, 1e-30)
+        q = jnp.clip(jnp.round(gt / scale), -_QMAX, _QMAX).astype(jnp.int16)
+        total = jax.lax.psum(q, axis).astype(jnp.float32) * scale  # int16 wire
+        new_err = (gt - q.astype(jnp.float32) * scale)[None]
+        return total.astype(g.dtype), new_err
+
+    pairs = jax.tree.map(one, grads, err)
+    summed = jax.tree.map(
+        lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_err = jax.tree.map(
+        lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return summed, new_err
+
+
+def init_error_state(grads_shape, n_pods: int):
+    """Zero error-feedback state: leading pod axis, sharded P('pod', ...)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros((n_pods, *g.shape), jnp.float32), grads_shape
+    )
+
+
+def error_state_specs(grads_specs):
+    def spec(s):
+        return P("pod", *tuple(s))
+
+    return jax.tree.map(spec, grads_specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,260 @@
+"""Optimizers, self-contained (no optax): AdamW (f32 or int8-quantised state),
+Adafactor (factored second moment — the 1T-param option), SGD; warmup-cosine
+schedule; global-norm clipping.
+
+State sharding: optimizer state mirrors the parameter shardings (FSDP+TP, see
+parallel/sharding.py), so ZeRO-style memory scaling falls out of GSPMD.  For
+the largest archs the dry-run uses either Adafactor or int8 Adam states
+(blockwise-quantised m/v, 4x smaller) so 1T params fit 512 x 16 GB (DESIGN.md
+§5); both are exact drop-ins here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+_QBLOCK = 128  # block size for int8 state quantisation
+# Per-leaf updates bigger than this (bytes, f32-upcast) run as a lax.map over
+# the leading (layer-group) axis: a (61, 384, 7168, 2048) stacked MoE leaf
+# would otherwise materialise ~5 GB x several f32 temporaries at once.
+_CHUNK_UPDATE_BYTES = 1 << 28
+
+
+def _chunked_leaf_update(upd, p, *args):
+    """Apply ``upd(p_slice, *arg_slices)`` over axis 0 when the leaf is huge."""
+    if p.ndim >= 3 and p.shape[0] > 1 and p.size * 4 > _CHUNK_UPDATE_BYTES:
+        return jax.lax.map(lambda xs: upd(*xs), (p, *args))
+    return upd(p, *args)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantisation for optimizer state
+# ---------------------------------------------------------------------------
+
+
+class Q8(NamedTuple):
+    q: jax.Array  # int8 payload, original shape
+    scale: jax.Array  # f32 per-block max-abs, shape (..., n_blocks)
+
+
+def _quantize(x: jax.Array, sqrt_domain: bool = False) -> Q8:
+    """Blockwise max-abs int8.  ``sqrt_domain`` compresses the dynamic range
+    quadratically — used for Adam's second moment (v ~ g^2 spans too many
+    decades for linear int8)."""
+    flat = x.reshape(-1)
+    if sqrt_domain:
+        flat = jnp.sqrt(jnp.maximum(flat, 0.0))
+    pad = (-flat.shape[0]) % _QBLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True)
+    q = jnp.round(fp / jnp.maximum(scale, 1e-12) * 127.0).astype(jnp.int8)
+    return Q8(q, scale[:, 0])
+
+
+def _dequantize(qs: Q8, shape, sqrt_domain: bool = False) -> jax.Array:
+    import math
+
+    fp = qs.q.astype(jnp.float32) * (qs.scale[:, None] / 127.0)
+    fp = fp.reshape(-1)[: math.prod(shape)].reshape(shape)
+    if sqrt_domain:
+        fp = fp * fp
+    return fp
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adamw8 | adafactor | sgd
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jax.Array], tuple[Params, Any, dict]]
+
+
+def _adamw(cfg: OptConfig, quantized: bool) -> Optimizer:
+    lr_fn = warmup_cosine(cfg.lr, cfg.warmup, cfg.total_steps)
+
+    def init(params):
+        if quantized:
+            mk = jax.tree.map(lambda p: _quantize(jnp.zeros_like(p, jnp.float32)), params)
+            vk = jax.tree.map(lambda p: _quantize(jnp.zeros_like(p, jnp.float32)), params)
+        else:
+            mk = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            vk = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": mk, "v": vk, "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = _dequantize(m, p.shape) if quantized else m
+            vf = _dequantize(v, p.shape, sqrt_domain=True) if quantized else v
+            mf = cfg.b1 * mf + (1 - cfg.b1) * g
+            vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+            step_ = lr * (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+            newp = p.astype(jnp.float32) - step_ - lr * cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (
+                newp.astype(p.dtype),
+                _quantize(mf) if quantized else mf,
+                _quantize(vf, sqrt_domain=True) if quantized else vf,
+            )
+
+        pflat, tree = jax.tree.flatten(params)
+        gflat = jax.tree.leaves(grads)
+        mflat = tree.flatten_up_to(state["m"])
+        vflat = tree.flatten_up_to(state["v"])
+        outs = [
+            upd(p, g, m, v)
+            if quantized
+            else _chunked_leaf_update(upd, p, g, m, v)
+            for p, g, m, v in zip(pflat, gflat, mflat, vflat)
+        ]
+        newp = tree.unflatten([o[0] for o in outs])
+        newm = tree.unflatten([o[1] for o in outs])
+        newv = tree.unflatten([o[2] for o in outs])
+        return newp, {"m": newm, "v": newv, "count": count}, {"lr": lr, "gnorm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def _adafactor(cfg: OptConfig) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern): O(rows+cols) state for 2D+."""
+    lr_fn = warmup_cosine(cfg.lr, cfg.warmup, cfg.total_steps)
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(st, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, _step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        decay = 1.0 - count.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., :, None]
+                    * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)[
+                        ..., None
+                    ]
+                )
+                step_ = lr * g / jnp.maximum(denom, 1e-30)
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                step_ = lr * g / (jnp.sqrt(v) + 1e-30)
+                news = {"v": v}
+            newp = p.astype(jnp.float32) - step_ - lr * cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return newp.astype(p.dtype), news
+
+        flat, tree = jax.tree.flatten(params)
+        gflat = jax.tree.leaves(grads)
+        sflat = tree.flatten_up_to(state["stats"])
+        outs = [
+            _chunked_leaf_update(upd, p, g, s) for p, g, s in zip(flat, gflat, sflat)
+        ]
+        newp = tree.unflatten([o[0] for o in outs])
+        news = tree.unflatten([o[1] for o in outs])
+        return newp, {"stats": news, "count": count}, {"lr": lr, "gnorm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def _sgd(cfg: OptConfig) -> Optimizer:
+    lr_fn = warmup_cosine(cfg.lr, cfg.warmup, cfg.total_steps)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        newp = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(
+                p.dtype
+            ),
+            params,
+            grads,
+        )
+        return newp, {"count": count}, {"lr": lr, "gnorm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return _adamw(cfg, quantized=False)
+    if cfg.name == "adamw8":
+        return _adamw(cfg, quantized=True)
+    if cfg.name == "adafactor":
+        return _adafactor(cfg)
+    if cfg.name == "sgd":
+        return _sgd(cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,169 @@
+"""CKM-compressed KV cache for long-context decode (beyond-paper feature).
+
+The paper reads a dataset as a mixture of K weighted Diracs recovered from a
+sketch.  A transformer's KV cache *is* a point cloud per head — so for the
+``long_500k`` cells we compress each global-attention head's S=524288 keys
+into K centroids with weights (cluster sizes), and decode-time attention runs
+over [centroids ∪ recent-token ring]:
+
+    softmax_j( q.k_j )  over S keys   ≈   softmax_c( q.ck_c + log w_c ) over K
+                                          centroids (+ exact recent window)
+
+The ``log w_c`` bias makes a centroid of w collapsed keys contribute like w
+near-identical keys — exactly the paper's weighted-Dirac mixture view.
+Compression itself can run with CKM (sketch -> CLOMPR; the compressive path —
+the cache never needs to be gathered to one host, only its O(m) sketch) or
+with Lloyd-Max (fast local baseline) — both from repro.core.
+
+Attention cost per step drops from O(S) to O(K + recent): 524288 -> 5120 per
+head (~100x) for the assigned long_500k shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ckm as ckm_mod
+from repro.core import lloyd as lloyd_mod
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+def compress_head(key, keys_1h, values_1h, n_centroids, method="lloyd",
+                  ckm_cfg: ckm_mod.CKMConfig | None = None):
+    """Compress one head's cache.  keys/values: (S, hd) -> (K, hd)x2 + logw."""
+    if method == "ckm":
+        res = ckm_mod.fit(key, keys_1h, ckm_cfg)
+        cents = res.centroids
+    else:
+        res = lloyd_mod.lloyd(
+            key, keys_1h,
+            lloyd_mod.LloydConfig(k=n_centroids, max_iters=25, init="kpp"),
+        )
+        cents = res.centroids
+    assign = ckm_mod.predict(keys_1h, cents)
+    one_hot = jax.nn.one_hot(assign, n_centroids, dtype=jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)  # (K,)
+    # Centroid value = mean of member values; key = mean of member keys
+    # (recomputed from the hard assignment for both methods).
+    ck = (one_hot.T @ keys_1h.astype(jnp.float32)) / jnp.maximum(counts[:, None], 1.0)
+    cv = (one_hot.T @ values_1h.astype(jnp.float32)) / jnp.maximum(counts[:, None], 1.0)
+    logw = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1.0)), -1e30)
+    return ck, cv, logw
+
+
+def compress_kv(
+    key: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    n_centroids: int,
+    method: str = "lloyd",
+):
+    """k, v: (B, S, KV, hd) -> dict(ck (B,K,KV,hd), cv, clogw (B,K,KV)).
+
+    Offline (per-compression-epoch) path — not part of the decode step.  For
+    ``method="ckm"`` one frequency scale is estimated from a key sample and
+    shared across heads (Dirac-regime boost, see data/clustering.py).
+    """
+    b, s, kvh, hd = k.shape
+    kk = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    keys = jax.random.split(key, b * kvh)
+    ckm_cfg = None
+    if method == "ckm":
+        from repro.core import frequencies as fq
+
+        sample = kk.reshape(-1, hd)[: 4096].astype(jnp.float32)
+        s2 = float(fq.estimate_sigma2(key, sample)) * 6.0
+        ckm_cfg = ckm_mod.CKMConfig(
+            k=n_centroids, m=5 * n_centroids * hd, sigma2=s2,
+            init="sample", atom_steps=80, joint_steps=60, nnls_iters=40,
+            final_steps=200, atom_restarts=2,
+        )
+    ck, cv, logw = jax.vmap(
+        lambda kc, kh, vh: compress_head(kc, kh, vh, n_centroids, method, ckm_cfg)
+    )(keys, kk.astype(jnp.float32), vv.astype(jnp.float32))
+    ck = ck.reshape(b, kvh, n_centroids, hd).transpose(0, 2, 1, 3).astype(k.dtype)
+    cv = cv.reshape(b, kvh, n_centroids, hd).transpose(0, 2, 1, 3).astype(v.dtype)
+    clogw = logw.reshape(b, kvh, n_centroids).transpose(0, 2, 1)
+    return {"ck": ck, "cv": cv, "clogw": clogw}
+
+
+def build_compressed_cache(
+    key: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    n_centroids: int,
+    ring: int,
+    method: str = "lloyd",
+) -> Params:
+    """Full compressed-cache constructor for a prefix of S tokens.
+
+    Position layout (S = k.shape[1], decode continues at index S):
+    - centroids cover positions [0, S-ring]  (inclusive),
+    - the exact ring holds positions (S-ring, S) — ring-1 entries at their
+      ``pos % ring`` slots, leaving slot ``S % ring`` vacant for the incoming
+      token (so the first decode step overwrites nothing live).
+    Steady state: tokens aging out of the ring between recompressions are
+    approximated only by the centroid mass (bounded by the recompression
+    period — same contract as H2O/SnapKV-style cache eviction, but here the
+    evicted mass is *summarised*, not dropped).
+    """
+    b, s, kvh, hd = k.shape
+    assert s > ring >= 1, (s, ring)
+    split = s - ring + 1  # centroids cover [0, split)
+    comp = compress_kv(key, k[:, :split], v[:, :split], n_centroids, method)
+    ring_k = jnp.zeros((b, ring, kvh, hd), k.dtype)
+    ring_v = jnp.zeros((b, ring, kvh, hd), v.dtype)
+    pos = jnp.arange(split, s)
+    slots = pos % ring
+    ring_k = ring_k.at[:, slots].set(k[:, split:])
+    ring_v = ring_v.at[:, slots].set(v[:, split:])
+    return {**comp, "k": ring_k, "v": ring_v}
+
+
+def attention_decode_compressed(
+    params: Params,
+    dims: L.AttnDims,
+    x: jax.Array,
+    cache: Params,
+    index: jax.Array,
+):
+    """Decode attention over [centroids + recent ring].  x: (B, 1, d).
+
+    cache: {"ck","cv","clogw","k","v"} — the raw ring ("k","v") holds the most
+    recent tokens exactly; older history lives in the weighted centroids.
+    Returns (out (B, 1, d), updated kv cache entries).
+    """
+    b = x.shape[0]
+    h, kvh, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    ring = cache["k"].shape[1]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q, k_new, v_new = L._qkv(params, dims, x, pos)
+    slot = index % ring
+    ck_ring = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    cv_ring = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+
+    rep = h // kvh
+    qh = q.reshape(b, 1, kvh, rep, hd)
+    # Scores over centroids, with the log-cluster-size bias.
+    s_cent = jnp.einsum("bqkrh,bskh->bkrqs", qh, cache["ck"]).astype(jnp.float32)
+    s_cent = s_cent / jnp.sqrt(hd) + cache["clogw"].transpose(0, 2, 1)[:, :, None, None, :]
+    # Scores over the exact recent ring.
+    s_ring = jnp.einsum("bqkrh,bskh->bkrqs", qh, ck_ring).astype(jnp.float32)
+    s_ring = s_ring / jnp.sqrt(hd)
+    ring_pos = jnp.arange(ring)
+    valid = (ring_pos <= slot) | (index >= ring)
+    s_ring = jnp.where(valid[None, None, None, None, :], s_ring, -1e30)
+
+    scores = jnp.concatenate([s_cent, s_ring], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    vals = jnp.concatenate([cache["cv"], cv_ring], axis=1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, vals).reshape(b, 1, h * hd)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, {"k": ck_ring, "v": cv_ring}

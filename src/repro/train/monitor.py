@@ -1,0 +1,72 @@
+"""Activation-space monitoring via streaming sketches (paper integration #3).
+
+Every train step folds a mean-pooled final-hidden-state batch into an O(m)
+sketch (rides the step; the cross-device merge is just the replicated-output
+psum GSPMD already emits).  Offline — at checkpoint boundaries — CKM decodes
+K centroids from the sketch ALONE, giving a cluster-level picture of the
+representation space over time without ever storing activations.
+
+Drift between two windows = mean matched-centroid displacement, weighted by
+mixture mass: cheap early-warning for representation collapse / data shifts
+at 1000-node scale, where logging raw activations is impossible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ckm as ckm_mod
+from repro.core import distributed_sketch as ds
+from repro.core import frequencies as fq
+
+
+@dataclasses.dataclass
+class ActivationMonitor:
+    dim: int  # d_model
+    k: int = 8
+    m: int | None = None
+    sigma2: float = 1.0
+    seed: int = 17
+
+    def __post_init__(self):
+        self.m_ = self.m or 4 * self.k * self.dim
+        self.freqs = fq.draw_frequencies(
+            jax.random.PRNGKey(self.seed), self.m_, self.dim, self.sigma2
+        )
+
+    def init_state(self) -> ds.SketchState:
+        return ds.init_state(self.m_, self.dim)
+
+    def update(self, state: ds.SketchState, pooled: jax.Array) -> ds.SketchState:
+        """Fold (B, d) pooled hiddens; call inside or outside the train step."""
+        return ds.update(state, pooled.astype(jnp.float32), self.freqs)
+
+    def decode(self, state: ds.SketchState, key=None) -> ckm_mod.CKMResult:
+        key = key if key is not None else jax.random.PRNGKey(self.seed + 1)
+        z, lo, hi = ds.finalize(state)
+        cfg = ckm_mod.CKMConfig(
+            k=self.k, m=self.m_, atom_steps=150, joint_steps=100, final_steps=300
+        )
+        cents, alphas, cost = ckm_mod.decode_sketch(key, z, self.freqs, lo, hi, cfg)
+        return ckm_mod.CKMResult(
+            cents, alphas, cost, jnp.asarray(self.sigma2), self.freqs, z, (lo, hi)
+        )
+
+    @staticmethod
+    def drift(prev: ckm_mod.CKMResult, cur: ckm_mod.CKMResult) -> float:
+        """Mass-weighted mean displacement between matched centroid sets."""
+        a = np.asarray(prev.centroids)
+        b = np.asarray(cur.centroids)
+        wa = np.asarray(prev.weights)
+        d = np.linalg.norm(a[:, None] - b[None], axis=-1)
+        moved, used = 0.0, d.copy()
+        for _ in range(a.shape[0]):
+            i, j = np.unravel_index(np.argmin(used), used.shape)
+            moved += wa[i] * d[i, j]
+            used[i, :] = np.inf
+            used[:, j] = np.inf
+        return float(moved / max(wa.sum(), 1e-9))

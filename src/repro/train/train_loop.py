@@ -1,0 +1,192 @@
+"""The training loop: checkpoint/restart, preemption, monitoring, balancing.
+
+Fault-tolerance model (designed for 1000+ nodes, exercised here in-process):
+- state (params/opt/step/monitor sketch) checkpoints atomically + async every
+  ``ckpt_every`` steps; restart resumes from the latest complete checkpoint;
+- data is a pure function of (seed, step): resume replays nothing, skips
+  nothing, and any worker can regenerate any shard (straggler re-dispatch);
+- a preemption signal (SIGTERM or a flag file, as SLURM/Borg deliver) forces
+  a final synchronous checkpoint before exit;
+- elastic restart: checkpoints store logical specs; a restart may present a
+  different mesh (tested: save on (4,2), restore on (2,2,2)).
+
+CKM integrations live here too: the activation monitor folds pooled hidden
+states into a sketch each step, and the compressive balancer periodically
+re-weights the data mixture from document-embedding sketches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import distributed_sketch as ds
+from repro.data.clustering import CompressiveBalancer
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.train import (
+    build_train_step,
+    default_opt_config,
+    init_sharded_state,
+    state_shapes,
+    state_specs,
+)
+from repro.models import transformer as tfm
+from repro.optim.optimizers import make_optimizer
+from repro.parallel import sharding as sh
+from repro.train.monitor import ActivationMonitor
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    keep: int = 3
+    monitor_k: int = 0  # 0 = off
+    balance_every: int = 0  # 0 = off; else rebalance mixture every N steps
+    preempt_file: str | None = None  # touch this file to request preemption
+    log_every: int = 10
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"
+
+
+def _pooled_loss(params, cfg, batch, mesh, dtype, remat):
+    x, aux = tfm.forward(params, cfg, batch, mesh, dtype, remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        f = batch["patches"].shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], f), -100, labels.dtype), labels], axis=1
+        )
+    loss = tfm.chunked_ce_loss(params, cfg, x, labels)
+    pooled = jnp.mean(x.astype(jnp.float32), axis=1)  # (B, d)
+    return loss + 0.01 * aux, pooled
+
+
+def run(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    loop: LoopConfig,
+    data_cfg: DataConfig | None = None,
+    opt_cfg=None,
+    seed: int = 0,
+) -> dict:
+    """Train; resume from the latest checkpoint in loop.ckpt_dir if present."""
+    opt_cfg = opt_cfg or default_opt_config(cfg)
+    opt = make_optimizer(opt_cfg)
+    data_cfg = data_cfg or DataConfig(seed=seed)
+    source = SyntheticLM(cfg, shape, data_cfg)
+    ckpt = Checkpointer(loop.ckpt_dir, keep=loop.keep)
+
+    monitor = (
+        ActivationMonitor(dim=cfg.d_model, k=loop.monitor_k)
+        if loop.monitor_k
+        else None
+    )
+    balancer = (
+        CompressiveBalancer(
+            k=data_cfg.n_domains, dim=data_cfg.embed_dim, seed=seed + 3
+        )
+        if loop.balance_every
+        else None
+    )
+
+    # -- build step ----------------------------------------------------------
+    def step_fn(state, batch):
+        def loss_fn(p):
+            return _pooled_loss(p, cfg, batch, mesh, loop.dtype, loop.remat)
+
+        (loss, pooled), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        new_params, new_opt, metrics = opt.update(
+            grads, state["opt"], state["params"], state["step"]
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if monitor is not None:
+            new_state["monitor"] = ds.update(
+                state["monitor"], pooled, monitor.freqs
+            )
+        return new_state, {"loss": loss, **metrics}
+
+    shapes = state_shapes(cfg, opt)
+    specs = state_specs(shapes, cfg, mesh)
+    if monitor is not None:
+        specs["monitor"] = jax.tree.map(lambda _: sh.P(), monitor.init_state())
+    state_shardings = sh.to_shardings(specs, mesh)
+    batch_specs = sh.batch_specs(cfg, shape, mesh)
+    batch_shardings = sh.to_shardings(batch_specs, mesh)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, batch_shardings),
+        donate_argnums=(0,),
+    )
+
+    # -- init or resume --------------------------------------------------------
+    start = ckpt.latest_step()
+    state = init_sharded_state(cfg, opt, mesh, seed=seed)
+    if monitor is not None:
+        state["monitor"] = jax.device_put(
+            monitor.init_state(), sh.to_shardings(specs["monitor"], mesh)
+        )
+    if start is not None:
+        state = ckpt.restore(state, shardings=state_shardings)
+        print(f"[train] resumed from step {start}")
+    start = int(jax.device_get(state["step"]))
+
+    preempted = {"flag": False}
+
+    def _sigterm(_sig, _frm):
+        preempted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _sigterm)
+
+    history = []
+    try:
+        for step in range(start, loop.steps):
+            batch = source.batch(step)
+            meta = {k: batch.pop(k) for k in ("_doc_embeds", "_domains")}
+            batch = jax.device_put(batch, batch_shardings)
+            state, metrics = jitted(state, batch)
+            if balancer is not None:
+                balancer.update(meta["_doc_embeds"])
+                if (step + 1) % loop.balance_every == 0:
+                    res = balancer.cluster()
+                    source.set_domain_weights(balancer.balanced_weights(res))
+            if (step + 1) % loop.log_every == 0 or step == loop.steps - 1:
+                m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+                history.append({"step": step + 1, **m})
+                print(f"[train] step {step+1}: loss {m['loss']:.4f}")
+            want_ckpt = (step + 1) % loop.ckpt_every == 0
+            preempt = preempted["flag"] or (
+                loop.preempt_file and Path(loop.preempt_file).exists()
+            )
+            if want_ckpt or preempt or step == loop.steps - 1:
+                (ckpt.save if preempt else ckpt.save_async)(
+                    int(jax.device_get(state["step"])), state, specs
+                )
+                if preempt:
+                    print("[train] preemption requested: checkpoint flushed, exiting")
+                    break
+    finally:
+        ckpt.wait()
+        signal.signal(signal.SIGTERM, old_handler)
+
+    out = {"history": history, "state": state}
+    if monitor is not None:
+        out["monitor_result"] = monitor.decode(jax.device_get(state["monitor"]))
+    return out

@@ -1,0 +1,360 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — a model
+stacked with ``lax.scan`` (all of ours) under-reports flops/bytes/collectives
+by the layer count.  Optimized HLO, however, annotates every while with
+``backend_config={"known_trip_count":{"n":...}}``.  This module parses the
+HLO text into computations, costs each one, and multiplies loop bodies by
+their trip counts (recursively, so chunked-scan-inside-layer-scan nests work).
+
+Cost model (per computation):
+- flops: 2 * prod(output dims) * prod(contracting dims) per ``dot``
+  (+ recursion into fusion/call/while sub-computations).  Elementwise flops
+  are ignored — matmuls dominate every assigned architecture.
+- bytes: fusion-boundary traffic — every materialising instruction reads its
+  operands and writes its result(s); internals of a fusion stay in
+  registers/VMEM.  Bookkeeping ops (tuple/GTE/parameter/bitcast/constant) are
+  free.
+- collective bytes: operand sizes of all-reduce / all-gather / reduce-scatter
+  / all-to-all / collective-permute (start variants counted once).
+
+These are PER-DEVICE quantities (the compiled module is the SPMD per-device
+program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*"
+    r"(?P<out>\([^)]*\)|[a-z][a-z0-9]*\[[^\]]*\]\S*)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>.*?)\)(?P<rest>.*)$"
+)
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "custom-call",  # layout/annotation custom-calls; real ones rare here
+}
+
+# Ops that READ only a slice/subset of their big operand (scan xs indexing,
+# embedding lookups, cache updates).  Charging the full operand would bill a
+# while body for its entire stacked xs on every iteration.
+_SLICING = {"dynamic-slice", "gather", "slice"}
+_UPDATING = {"dynamic-update-slice", "scatter", "scatter-add"}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+}
+_COLLECTIVE_DONE = {"all-reduce-done", "all-gather-done", "collective-permute-done"}
+
+
+def _shape_bytes(text: str) -> int:
+    return sum(
+        _DTYPE_BYTES.get(d, 4) * math.prod(int(x) for x in dims.split(",") if x)
+        for d, dims in _SHAPE_RE.findall(text)
+    )
+
+
+def _shape_elems(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    return math.prod(int(x) for x in m.group(2).split(",") if x)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += int(v * mult)
+
+
+def _parse_computations(text: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: list[str] | None = None
+    cur_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            # " = " (spaced) marks an instruction; "=" alone also appears in
+            # type comments like /*index=5*/ inside computation signatures.
+            if m and ("{" in line) and (" = " not in line.split("{")[0]):
+                cur_name = m.group(1)
+                cur = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur_name
+        else:
+            if line.strip() == "}":
+                comps[cur_name] = cur
+                cur = None
+            else:
+                cur.append(line)
+    return comps, entry
+
+
+def _dot_flops(out_type: str, lhs_type: str, rest: str) -> float:
+    out_elems = _shape_elems(out_type)
+    m = _CONTRACT_RE.search(rest)
+    lhs_shape = _SHAPE_RE.search(lhs_type)
+    contract = 1
+    if m and lhs_shape:
+        dims = [int(x) for x in lhs_shape.group(2).split(",") if x]
+        for idx in (int(i) for i in m.group(1).split(",") if i):
+            if idx < len(dims):
+                contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _parse_instrs(lines):
+    """Parse instruction lines + build name -> (type, op, operands) tables."""
+    instrs = []
+    types: dict[str, str] = {}
+    producers: dict[str, tuple[str, list[str]]] = {}
+    consumers: dict[str, list[str]] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group("name")
+        types[name] = m.group("out")
+        ops = _OPERAND_NAME_RE.findall(m.group("operands"))
+        producers[name] = (m.group("op"), ops)
+        for o in ops:
+            consumers.setdefault(o, []).append(name)
+        instrs.append(m)
+    return instrs, types, producers, consumers
+
+
+def _operand_types(operands: str, types: dict[str, str]) -> list[str]:
+    return [types.get(n, "") for n in _OPERAND_NAME_RE.findall(operands)]
+
+
+def _is_convert(name: str, producers) -> bool:
+    if name not in producers:
+        return False
+    op, _ = producers[name]
+    # XLA CPU wraps bf16->f32 casts as "convert" or "wrapped_convert*" fusions.
+    return op == "convert" or (op == "fusion" and "convert" in name)
+
+
+def _effective_bytes(name: str, types, producers) -> int:
+    """Bytes of a value at its SEMANTIC dtype (TPU target model).
+
+    The CPU backend has no native bf16 compute: it inserts convert(bf16->f32)
+    around every dot, so the compiled artifact moves f32 where a TPU moves
+    bf16.  When a value is produced by such a convert, count the bytes of the
+    convert's INPUT type instead.
+    """
+    own = _shape_bytes(types.get(name, ""))
+    if _is_convert(name, producers):
+        _, ops = producers[name]
+        if ops:
+            src = _shape_bytes(types.get(ops[0], ""))
+            if 0 < src < own:
+                return src
+    return own
+
+
+def _result_effective_bytes(name: str, types, producers, consumers) -> int:
+    """Result bytes, narrowed when every consumer immediately converts down
+    (models the TPU dot/all-reduce emitting bf16 directly)."""
+    own = _shape_bytes(types.get(name, ""))
+    cons = consumers.get(name, [])
+    if cons and all(_is_convert(c, producers) for c in cons):
+        narrowest = min(_shape_bytes(types.get(c, "")) for c in cons)
+        if 0 < narrowest < own:
+            return narrowest
+    return own
+
+
+_FUSION_PARAM_CACHE: dict[int, dict] = {}
+
+
+def _fusion_param_bytes(comp_name: str, comps) -> dict[int, int] | None:
+    """Per-parameter effective read bytes for a fusion computation.
+
+    If parameter i is consumed ONLY by slicing ops (dynamic-slice/gather),
+    the fusion reads just those slices — map i -> sum(slice output bytes).
+    Returns None when the computation is unknown.
+    """
+    cache_key = id(comps)
+    per_mod = _FUSION_PARAM_CACHE.setdefault(cache_key, {})
+    if comp_name in per_mod:
+        return per_mod[comp_name]
+    lines = comps.get(comp_name)
+    if lines is None:
+        per_mod[comp_name] = None
+        return None
+    instrs, types, producers, consumers = _parse_instrs(lines)
+    param_names: dict[int, str] = {}
+    for m in instrs:
+        if m.group("op") == "parameter":
+            idx_m = re.match(r"\s*(\d+)", m.group("operands"))
+            if idx_m:
+                param_names[int(idx_m.group(1))] = m.group("name")
+    out: dict[int, int] = {}
+    for idx, pname in param_names.items():
+        cons = consumers.get(pname, [])
+        if cons and all(
+            producers.get(c, ("", []))[0] in _SLICING for c in cons
+        ):
+            out[idx] = sum(_shape_bytes(types.get(c, "")) for c in cons)
+    per_mod[comp_name] = out
+    return out
+
+
+def _cost_computation(name, comps, memo) -> Costs:
+    if name in memo:
+        return memo[name]
+    total = Costs()
+    memo[name] = total  # guards cycles (none expected)
+    instrs, types, producers, consumers = _parse_instrs(comps.get(name, ()))
+    for m in instrs:
+        op = m.group("op")
+        iname = m.group("name")
+        out = m.group("out")
+        operands = m.group("operands")
+        rest = m.group("rest")
+        op_names = _OPERAND_NAME_RE.findall(operands)
+        op_types = _operand_types(operands, types)
+        op_bytes = sum(
+            _effective_bytes(n, types, producers) for n in op_names
+        ) or sum(_shape_bytes(t) for t in op_types)
+        if op in _COLLECTIVE_DONE:
+            continue
+        if op in _COLLECTIVES:
+            # wire bytes at the semantic dtype.  Only all-reduce results are
+            # narrowed by their consumer converts: a TPU dot emits bf16
+            # directly, so the psum right after it is bf16 (the f32 here is a
+            # CPU-lowering shim).  all-gather/all-to-all results keep their
+            # stored dtype — casting before the gather is a real graph
+            # change, measured as such.
+            nbytes = op_bytes or _shape_bytes(out)
+            base = op.replace("-start", "")
+            if base == "all-reduce":
+                narrowed = _result_effective_bytes(
+                    iname, types, producers, consumers
+                )
+                own_out = _shape_bytes(out)
+                if own_out and narrowed < own_out:
+                    nbytes = int(nbytes * narrowed / own_out)
+            total.coll_bytes += nbytes
+            total.coll_by_op[base] += nbytes
+            total.coll_count[base] += 1
+            total.bytes += nbytes  # collectives also touch HBM
+            continue
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            cm = re.search(r"body=%?([\w\.\-]+)", rest)
+            if cm:
+                total.add(_cost_computation(cm.group(1), comps, memo), trip)
+            continue
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(rest)
+            branches = []
+            if bm:
+                branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+            else:
+                branches = re.findall(r"(?:true|false)_computation=%?([\w\.\-]+)", rest)
+            sub = [_cost_computation(b, comps, memo) for b in branches]
+            if sub:
+                worst = max(sub, key=lambda c: c.flops + c.bytes)
+                total.add(worst)
+            continue
+        if op in ("fusion", "call", "async-start"):
+            cm = _CALLS_RE.search(rest)
+            fusion_bytes = op_bytes
+            if cm:
+                sub = _cost_computation(cm.group(1), comps, memo)
+                total.flops += sub.flops  # dots inside fusions still run
+                total.coll_bytes += sub.coll_bytes
+                for k, v in sub.coll_by_op.items():
+                    total.coll_by_op[k] += v
+                for k, v in sub.coll_count.items():
+                    total.coll_count[k] += v
+                # Params consumed ONLY by slicing ops inside the fusion are
+                # read at slice granularity (scan xs indexing pattern).
+                adj = _fusion_param_bytes(cm.group(1), comps)
+                if adj is not None:
+                    fusion_bytes = 0
+                    for i, n in enumerate(op_names):
+                        full = _effective_bytes(n, types, producers)
+                        fusion_bytes += min(full, adj.get(i, full))
+            # bytes: fusion boundary only
+            total.bytes += fusion_bytes + _shape_bytes(out)
+            continue
+        if op in _SLICING:
+            # reads the slice (~= output) + indices, not the whole operand
+            total.bytes += 2 * _shape_bytes(out)
+            continue
+        if op in _UPDATING:
+            # in-place: reads the update operand, writes the slice region
+            upd_bytes = (
+                _effective_bytes(op_names[1], types, producers)
+                if len(op_names) > 1
+                else _shape_bytes(out)
+            )
+            total.bytes += 2 * upd_bytes
+            continue
+        if op in ("dot", "convolution"):
+            lhs = op_types[0] if op_types else ""
+            total.flops += _dot_flops(out, lhs, rest)
+            total.bytes += op_bytes + _result_effective_bytes(
+                iname, types, producers, consumers
+            )
+            continue
+        if op in _BOOKKEEPING:
+            continue
+        if _is_convert(iname, producers):
+            continue  # CPU-only dtype shim: free on the TPU target
+        # generic materialising op (copy, broadcast, reduce, sort, rng, ...)
+        total.bytes += op_bytes + _shape_bytes(out)
+    return total
+
+
+def analyze_text(text: str) -> Costs:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return Costs()
+    memo: dict[str, Costs] = {}
+    # memo must not return the in-progress guard object for entry
+    return _cost_computation(entry, comps, memo)
+
+
+def analyze_compiled(compiled) -> Costs:
+    return analyze_text(compiled.as_text())

@@ -1,0 +1,148 @@
+"""Roofline accounting from compiled dry-run artifacts (assignment §ROOFLINE).
+
+All quantities are PER-DEVICE: the compiled module of an SPMD program is the
+per-device program, so ``cost_analysis()`` flops/bytes and the collective
+bytes parsed from ``compiled.as_text()`` are per-chip numbers.
+
+    compute_s    = HLO_flops / peak_flops            (197 TFLOP/s bf16, v5e)
+    memory_s     = HLO_bytes / hbm_bw                (819 GB/s)
+    collective_s = collective_bytes / link_bw        (~50 GB/s/link ICI)
+
+The dominant term is the step-time lower bound; MODEL_FLOPS/HLO_FLOPs
+measures how much compiled compute is "useful" (remat/dispatch waste).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+# e.g.  %x = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %p), ...
+_INSTR_RE = re.compile(
+    r"=\s*(?P<out>\([^=]*?\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<start>-start)?\("
+    r"(?P<operands>[^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int]
+    count_by_op: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in optimized HLO text."""
+    bytes_by_op: dict[str, int] = {}
+    count_by_op: dict[str, int] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group("op")
+        # operand types appear inline in HLO text: "bf16[8,16]{1,0} %arg"
+        nbytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group("operands"))
+        )
+        if nbytes == 0:  # fall back to the output shape
+            nbytes = sum(
+                _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group("out"))
+            )
+        bytes_by_op[op] = bytes_by_op.get(op, 0) + nbytes
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    collective_bytes: float  # per device
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float  # global useful flops (6 N D)
+    useful_ratio: float  # model_flops / (flops * chips)
+
+    def bound_step_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound step time (the score axis)."""
+        t_useful = self.model_flops / self.chips / PEAK_FLOPS
+        b = self.bound_step_time()
+        return t_useful / b if b > 0 else 0.0
+
+
+def analyze(compiled, chips: int, model_flops: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Uses the trip-count-aware HLO analyzer (utils/hlo.py): XLA's own
+    ``cost_analysis()`` counts scan bodies once, which would undercount every
+    layer-stacked model here by its depth.
+    """
+    from repro.utils import hlo as hlo_mod
+
+    costs = hlo_mod.analyze_compiled(compiled)
+    flops = costs.flops
+    hbm = costs.bytes
+    coll = CollectiveStats(
+        dict(costs.coll_by_op),
+        {k: int(v) for k, v in costs.coll_count.items()},
+    )
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll.total_bytes / LINK_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=float(coll.total_bytes),
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_ratio=model_flops / (flops * chips) if flops else 0.0,
+    )
+
+
+def train_model_flops(param_count: int, tokens: int) -> float:
+    """6 N D (N = active params)."""
+    return 6.0 * param_count * tokens
+
+
+def decode_model_flops(param_count: int, batch: int) -> float:
+    """One token per sequence: 2 N per token forward (decode has no backward)."""
+    return 2.0 * param_count * batch

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 real CPU
+device; multi-device tests spawn subprocesses with their own flags."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def gaussian_blobs():
+    """Well-separated mixture for recovery tests: K=5 unit blobs in R^4."""
+    from repro.data import synthetic
+
+    key = jax.random.PRNGKey(42)
+    x, labels, means = synthetic.gaussian_mixture(
+        key, 8000, k=5, n=4, c=6.0, return_labels=True
+    )
+    return x, labels, means

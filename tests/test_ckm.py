@@ -1,0 +1,149 @@
+"""Behaviour tests for the CKM decoder + Lloyd baseline (paper §3.2, §4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ckm as ckm_mod
+from repro.core import lloyd as lloyd_mod
+from repro.core import nnls as nnls_mod
+from repro.data import synthetic
+
+
+def _match_errors(truth, cents):
+    d = np.linalg.norm(np.asarray(truth)[:, None] - np.asarray(cents)[None], axis=-1)
+    errs = []
+    d = d.copy()
+    for _ in range(truth.shape[0]):
+        i, j = np.unravel_index(np.argmin(d), d.shape)
+        errs.append(d[i, j])
+        d[i, :] = np.inf
+        d[:, j] = np.inf
+    return np.array(errs)
+
+
+class TestCKMRecovery:
+    def test_recovers_separated_clusters(self, gaussian_blobs):
+        """On well-separated blobs CKM must localise every true mean."""
+        x, labels, means = gaussian_blobs
+        cfg = ckm_mod.CKMConfig(k=5)
+        res = ckm_mod.fit(jax.random.PRNGKey(0), x, cfg)
+        errs = _match_errors(means, res.centroids)
+        assert np.all(errs < 1.0), errs  # within a cluster std of each mean
+
+    def test_weights_are_probabilities(self, gaussian_blobs):
+        x, _, _ = gaussian_blobs
+        res = ckm_mod.fit(jax.random.PRNGKey(1), x, ckm_mod.CKMConfig(k=5))
+        w = np.asarray(res.weights)
+        assert np.all(w >= 0) and abs(w.sum() - 1.0) < 1e-5
+
+    def test_sse_close_to_lloyd(self, gaussian_blobs):
+        """Paper's headline: CKM SSE comparable to Lloyd-Max (rel < 1.5)."""
+        x, _, _ = gaussian_blobs
+        res = ckm_mod.fit(jax.random.PRNGKey(2), x, ckm_mod.CKMConfig(k=5))
+        km = lloyd_mod.kmeans(
+            jax.random.PRNGKey(3), x, lloyd_mod.LloydConfig(k=5, replicates=3)
+        )
+        rel = float(ckm_mod.sse(x, res.centroids)) / float(km.sse)
+        assert rel < 1.5, rel
+
+    def test_replicates_select_lower_cost(self, gaussian_blobs):
+        x, _, _ = gaussian_blobs
+        r1 = ckm_mod.fit(jax.random.PRNGKey(4), x, ckm_mod.CKMConfig(k=5))
+        r3 = ckm_mod.fit(
+            jax.random.PRNGKey(4), x, ckm_mod.CKMConfig(k=5, replicates=3)
+        )
+        assert float(r3.cost) <= float(r1.cost) + 1e-6
+
+    def test_init_strategies_run(self, gaussian_blobs):
+        """range / sample / kpp all produce valid centroids (paper §4.2)."""
+        x, _, means = gaussian_blobs
+        for init in ("range", "sample", "kpp"):
+            cfg = ckm_mod.CKMConfig(k=5, init=init, atom_steps=100, joint_steps=80)
+            res = ckm_mod.fit(jax.random.PRNGKey(5), x, cfg)
+            assert res.centroids.shape == (5, 4)
+            assert np.all(np.isfinite(np.asarray(res.centroids)))
+
+    def test_centroids_respect_bounds(self, gaussian_blobs):
+        """Box constraint l <= c <= u (paper's 'additional constraints')."""
+        x, _, _ = gaussian_blobs
+        res = ckm_mod.fit(jax.random.PRNGKey(6), x, ckm_mod.CKMConfig(k=5))
+        lo, hi = res.bounds
+        c = res.centroids
+        assert bool(jnp.all(c >= lo - 1e-5)) and bool(jnp.all(c <= hi + 1e-5))
+
+    def test_decode_from_sketch_only(self, gaussian_blobs):
+        """Compressive contract: decoding uses only (z, W, l, u) — no data."""
+        x, _, means = gaussian_blobs
+        cfg = ckm_mod.CKMConfig(k=5)
+        z, w, _, (lo, hi) = ckm_mod.compute_sketch(jax.random.PRNGKey(7), x, cfg)
+        cents, alphas, cost = ckm_mod.decode_sketch(
+            jax.random.PRNGKey(8), z, w, lo, hi, cfg
+        )
+        errs = _match_errors(means, cents)
+        assert np.all(errs < 1.2), errs
+
+
+class TestLloyd:
+    def test_recovers_separated_clusters(self, gaussian_blobs):
+        x, _, means = gaussian_blobs
+        res = lloyd_mod.kmeans(
+            jax.random.PRNGKey(0), x, lloyd_mod.LloydConfig(k=5, replicates=3, init="kpp")
+        )
+        errs = _match_errors(means, res.centroids)
+        assert np.all(errs < 0.5), errs
+
+    def test_sse_decreases_with_replicates(self, gaussian_blobs):
+        x, _, _ = gaussian_blobs
+        r1 = lloyd_mod.kmeans(jax.random.PRNGKey(1), x, lloyd_mod.LloydConfig(k=5))
+        r5 = lloyd_mod.kmeans(
+            jax.random.PRNGKey(1), x, lloyd_mod.LloydConfig(k=5, replicates=5)
+        )
+        assert float(r5.sse) <= float(r1.sse) * (1.0 + 1e-5)
+
+    def test_kpp_beats_range_on_average(self, gaussian_blobs):
+        """k-means++ should not be worse than range init (paper Fig. 1)."""
+        x, _, _ = gaussian_blobs
+        sses = {}
+        for init in ("range", "kpp"):
+            vals = [
+                float(
+                    lloyd_mod.lloyd(
+                        jax.random.PRNGKey(s), x, lloyd_mod.LloydConfig(k=5, init=init)
+                    ).sse
+                )
+                for s in range(5)
+            ]
+            sses[init] = np.mean(vals)
+        assert sses["kpp"] <= sses["range"] * 1.05
+
+
+class TestNNLS:
+    def test_matches_scipy(self):
+        from scipy.optimize import nnls as scipy_nnls
+
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(40, 8)).astype(np.float32)
+        beta_true = np.abs(rng.normal(size=8)).astype(np.float32)
+        beta_true[2] = 0.0
+        z = a @ beta_true
+        mask = jnp.ones((8,), bool)
+        beta = nnls_mod.nnls(jnp.asarray(a), jnp.asarray(z), mask, iters=500)
+        ref, _ = scipy_nnls(a, z)
+        np.testing.assert_allclose(np.asarray(beta), ref, atol=2e-3)
+
+    def test_mask_pins_columns(self):
+        rng = np.random.default_rng(1)
+        a = rng.normal(size=(20, 6)).astype(np.float32)
+        z = rng.normal(size=20).astype(np.float32)
+        mask = jnp.asarray([True, False, True, True, False, True])
+        beta = nnls_mod.nnls(jnp.asarray(a), jnp.asarray(z), mask)
+        assert float(beta[1]) == 0.0 and float(beta[4]) == 0.0
+
+    def test_nonnegative(self):
+        rng = np.random.default_rng(2)
+        a = rng.normal(size=(30, 5)).astype(np.float32)
+        z = rng.normal(size=30).astype(np.float32)
+        beta = nnls_mod.nnls(jnp.asarray(a), jnp.asarray(z), jnp.ones((5,), bool))
+        assert np.all(np.asarray(beta) >= 0)

@@ -1,0 +1,44 @@
+"""Integration: one dry-run cell end-to-end (512 fake devices, subprocess)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    from repro.launch.dryrun import run_cell
+
+    r = run_cell("llama3.2-1b", "train_4k", multi_pod=False, verbose=False)
+    assert r["status"] == "ok", r
+    assert r["chips"] == 256
+    assert r["dominant"] in ("compute", "memory", "collective")
+    # sanity bands: useful compute ratio consistent with full remat, and the
+    # three roofline terms all positive.
+    assert 0.3 < r["useful_ratio"] < 1.2, r["useful_ratio"]
+    assert r["compute_s"] > 0 and r["memory_s"] > 0 and r["collective_s"] > 0
+    # memory proof: argument+temp fit in a v5e's 16 GB with headroom factor 2
+    mem = r["memory_analysis"]
+    assert (mem["argument_size"] + mem["temp_size"]) < 2 * 16 * 2**30, mem
+    # serve cell too (sequence-sharded cache)
+    r2 = run_cell("llama3.2-1b", "decode_32k", multi_pod=False, verbose=False)
+    assert r2["status"] == "ok"
+    print(json.dumps({"ok": True}))
+    """
+)
+
+
+def test_dryrun_cell_end_to_end():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _PROG], env=env, capture_output=True, text=True,
+        timeout=580,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert '"ok": true' in out.stdout

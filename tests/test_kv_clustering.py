@@ -1,0 +1,148 @@
+"""CKM-compressed KV attention: exactness + fidelity properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.serve.kv_clustering import (
+    attention_decode_compressed,
+    build_compressed_cache,
+    compress_kv,
+)
+
+
+def _setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = tfm.init_lm(jax.random.PRNGKey(0), cfg)
+    p0 = jax.tree.map(lambda l: l[0], params["groups"]["0"])
+    dims = tfm.attn_dims(cfg, "attn")
+    return cfg, p0, dims
+
+
+def _full_attention(p0, dims, q_tok, k, v, index):
+    kp = jnp.pad(k, ((0, 0), (0, 1), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 1), (0, 0), (0, 0)))
+    out, _, _ = L.attention_decode(p0["mixer"], dims, q_tok, kp, vp, index)
+    return out
+
+
+def _manual_cache(k_cent, v_cent, logw, ring_k, ring_v):
+    return {"ck": k_cent, "cv": v_cent, "clogw": logw, "k": ring_k, "v": ring_v}
+
+
+class TestCompressedKVAttention:
+    def test_exact_when_every_key_is_its_own_centroid(self):
+        """Centroids = prefix keys (unit clusters, log w = 0) + exact ring:
+        the compressed step must equal full attention."""
+        cfg, p0, dims = _setup()
+        s, ring = 48, 16
+        key = jax.random.PRNGKey(3)
+        kk, kv_, kq = jax.random.split(key, 3)
+        k = jax.random.normal(kk, (1, s, cfg.n_kv_heads, cfg.head_dim_)) * 3
+        v = jax.random.normal(kv_, (1, s, cfg.n_kv_heads, cfg.head_dim_))
+        x = jax.random.normal(kq, (1, 1, cfg.d_model))
+        split = s - ring + 1
+        ring_k = jnp.zeros((1, ring, cfg.n_kv_heads, cfg.head_dim_))
+        ring_v = jnp.zeros_like(ring_k)
+        pos = jnp.arange(split, s)
+        ring_k = ring_k.at[:, pos % ring].set(k[:, split:])
+        ring_v = ring_v.at[:, pos % ring].set(v[:, split:])
+        cache = _manual_cache(
+            k[:, :split], v[:, :split],
+            jnp.zeros((1, split, cfg.n_kv_heads)), ring_k, ring_v,
+        )
+        out_c, _ = attention_decode_compressed(
+            p0["mixer"], dims, x, cache, jnp.asarray(s)
+        )
+        out_f = _full_attention(p0, dims, x, k, v, jnp.asarray(s))
+        np.testing.assert_allclose(
+            np.asarray(out_c), np.asarray(out_f), atol=2e-3, rtol=1e-2
+        )
+
+    def test_duplicate_keys_collapse_losslessly(self):
+        """w identical keys -> one centroid with log w bias: exact again."""
+        cfg, p0, dims = _setup()
+        uniq, dup, ring = 12, 4, 8
+        key = jax.random.PRNGKey(4)
+        kk, kv_, kq = jax.random.split(key, 3)
+        k_u = jax.random.normal(kk, (1, uniq, cfg.n_kv_heads, cfg.head_dim_)) * 3
+        v_u = jax.random.normal(kv_, (1, uniq, cfg.n_kv_heads, cfg.head_dim_))
+        # prefix = duplicated keys; ring = a few extra exact keys
+        k_pre = jnp.repeat(k_u, dup, axis=1)
+        v_pre = jnp.repeat(v_u, dup, axis=1)
+        k_ring_src = jax.random.normal(
+            jax.random.PRNGKey(8), (1, ring - 1, cfg.n_kv_heads, cfg.head_dim_)
+        )
+        v_ring_src = jax.random.normal(
+            jax.random.PRNGKey(9), (1, ring - 1, cfg.n_kv_heads, cfg.head_dim_)
+        )
+        k = jnp.concatenate([k_pre, k_ring_src], axis=1)
+        v = jnp.concatenate([v_pre, v_ring_src], axis=1)
+        s = k.shape[1]
+        x = jax.random.normal(kq, (1, 1, cfg.d_model))
+        split = s - ring + 1  # == uniq*dup
+        assert split == uniq * dup
+        ring_k = jnp.zeros((1, ring, cfg.n_kv_heads, cfg.head_dim_))
+        ring_v = jnp.zeros_like(ring_k)
+        pos = jnp.arange(split, s)
+        ring_k = ring_k.at[:, pos % ring].set(k[:, split:])
+        ring_v = ring_v.at[:, pos % ring].set(v[:, split:])
+        cache = _manual_cache(
+            k_u, v_u, jnp.full((1, uniq, cfg.n_kv_heads), jnp.log(float(dup))),
+            ring_k, ring_v,
+        )
+        out_c, _ = attention_decode_compressed(
+            p0["mixer"], dims, x, cache, jnp.asarray(s)
+        )
+        out_f = _full_attention(p0, dims, x, k, v, jnp.asarray(s))
+        np.testing.assert_allclose(
+            np.asarray(out_c), np.asarray(out_f), atol=2e-3, rtol=1e-2
+        )
+
+    @pytest.mark.parametrize("method", ["lloyd", "ckm"])
+    def test_clustered_kv_high_fidelity(self, method):
+        """Keys WITH cluster structure (the real-cache regime): small error."""
+        cfg, p0, dims = _setup()
+        s, n_clusters, ring = 512, 16, 32
+        key = jax.random.PRNGKey(5)
+        kc_, ka, kv_, kq = jax.random.split(key, 4)
+        centers = jax.random.normal(kc_, (n_clusters, cfg.n_kv_heads, cfg.head_dim_)) * 4
+        assign = jax.random.randint(ka, (s,), 0, n_clusters)
+        k = centers[assign][None] + 0.1 * jax.random.normal(
+            kv_, (1, s, cfg.n_kv_heads, cfg.head_dim_)
+        )
+        v = centers[assign][None] * 0.5 + 0.05 * jax.random.normal(
+            kq, (1, s, cfg.n_kv_heads, cfg.head_dim_)
+        )
+        x = jax.random.normal(jax.random.PRNGKey(6), (1, 1, cfg.d_model))
+        cache = build_compressed_cache(
+            jax.random.PRNGKey(7), k, v, n_clusters, ring, method=method
+        )
+        out_c, _ = attention_decode_compressed(
+            p0["mixer"], dims, x, cache, jnp.asarray(s)
+        )
+        out_f = _full_attention(p0, dims, x, k, v, jnp.asarray(s))
+        rel = float(
+            jnp.linalg.norm(out_c - out_f) / jnp.maximum(jnp.linalg.norm(out_f), 1e-9)
+        )
+        assert rel < 0.15, f"{method}: rel err {rel}"
+
+    def test_ring_receives_new_token(self):
+        cfg, p0, dims = _setup()
+        s = 32
+        k = jnp.zeros((1, s, cfg.n_kv_heads, cfg.head_dim_))
+        cache = _manual_cache(
+            k, k, jnp.zeros((1, s, cfg.n_kv_heads)),
+            jnp.zeros((1, 8, cfg.n_kv_heads, cfg.head_dim_)),
+            jnp.zeros((1, 8, cfg.n_kv_heads, cfg.head_dim_)),
+        )
+        x = jnp.ones((1, 1, cfg.d_model))
+        _, new = attention_decode_compressed(
+            p0["mixer"], dims, x, cache, jnp.asarray(s)
+        )
+        slot = s % 8
+        assert float(jnp.abs(new["k"][0, slot]).sum()) > 0.0

@@ -1,0 +1,152 @@
+"""Unit + property tests for the sketching operator (paper §3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frequencies as fq
+from repro.core import sketch as sk
+
+
+def _freqs(key, n, m, sigma2=1.0):
+    return fq.draw_frequencies(key, m, n, sigma2)
+
+
+class TestSketchOperator:
+    def test_matches_definition(self, rng):
+        """Sk(Y, b)_j == sum_l b_l exp(-i w_j^T y_l), vs naive complex numpy."""
+        kx, kw, kb = jax.random.split(rng, 3)
+        x = jax.random.normal(kx, (50, 3))
+        w = _freqs(kw, 3, 17)
+        beta = jax.random.uniform(kb, (50,))
+        zc = np.asarray(sk.sketch_complex(x, w, weights=beta))
+        proj = np.asarray(x) @ np.asarray(w)
+        expected = (np.asarray(beta) @ np.exp(-1j * proj)).astype(np.complex64)
+        np.testing.assert_allclose(zc, expected, rtol=1e-4, atol=1e-5)
+
+    def test_uniform_weights_default(self, rng):
+        kx, kw = jax.random.split(rng)
+        x = jax.random.normal(kx, (64, 4))
+        w = _freqs(kw, 4, 8)
+        z1 = sk.sketch(x, w)
+        z2 = sk.sketch(x, w, weights=jnp.full((64,), 1 / 64))
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-5)
+
+    def test_chunking_invariance(self, rng):
+        """Chunked accumulation must not change the value (incl. ragged N)."""
+        kx, kw = jax.random.split(rng)
+        x = jax.random.normal(kx, (1000, 5))
+        w = _freqs(kw, 5, 32)
+        z_big = sk.sketch(x, w, chunk=1024)
+        z_small = sk.sketch(x, w, chunk=96)  # does not divide 1000
+        np.testing.assert_allclose(np.asarray(z_big), np.asarray(z_small), atol=1e-4)
+
+    def test_linearity_in_distribution(self, rng):
+        """Sk is linear: sketch of union = weighted average of sketches."""
+        kx, ky, kw = jax.random.split(rng, 3)
+        xa = jax.random.normal(kx, (30, 3))
+        xb = jax.random.normal(ky, (70, 3))
+        w = _freqs(kw, 3, 16)
+        za = sk.sketch(xa, w)
+        zb = sk.sketch(xb, w)
+        zu = sk.sketch(jnp.concatenate([xa, xb]), w)
+        np.testing.assert_allclose(
+            np.asarray(zu), np.asarray(0.3 * za + 0.7 * zb), atol=1e-5
+        )
+
+    def test_atom_norm_constant(self, rng):
+        """||A delta_c|| = sqrt(m) for any c (unit-modulus samples)."""
+        kc, kw = jax.random.split(rng)
+        cs = jax.random.normal(kc, (20, 6)) * 10.0
+        w = _freqs(kw, 6, 33)
+        a = sk.atoms(cs, w)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(a), axis=1),
+            np.full(20, np.sqrt(33.0)),
+            rtol=1e-5,
+        )
+
+    def test_atom_is_dirac_sketch(self, rng):
+        """A delta_c == Sk({c}, [1])."""
+        kc, kw = jax.random.split(rng)
+        c = jax.random.normal(kc, (5,))
+        w = _freqs(kw, 5, 12)
+        np.testing.assert_allclose(
+            np.asarray(sk.atom(c, w)),
+            np.asarray(sk.sketch(c[None, :], w)),
+            atol=1e-6,
+        )
+
+    def test_complex_roundtrip(self, rng):
+        z = jax.random.normal(rng, (2 * 9,))
+        np.testing.assert_allclose(
+            np.asarray(sk.from_complex(sk.to_complex(z))), np.asarray(z)
+        )
+
+    def test_bounds_single_pass(self, rng):
+        x = jax.random.normal(rng, (100, 4)) * 3
+        lo, hi = sk.data_bounds(x)
+        assert bool(jnp.all(lo <= x.min(0))) and bool(jnp.all(hi >= x.max(0)))
+
+
+class TestSketchProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 8),
+        m=st.integers(1, 64),
+        npts=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_modulus_bounded_by_one(self, n, m, npts, seed):
+        """|z_j| <= 1 for any probability-weighted sketch (char. function)."""
+        key = jax.random.PRNGKey(seed)
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (npts, n)) * 5
+        w = _freqs(kw, n, m)
+        zc = sk.sketch_complex(x, w)
+        assert np.all(np.abs(np.asarray(zc)) <= 1.0 + 1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), shift=st.floats(-5, 5))
+    def test_translation_modulates_phase(self, seed, shift):
+        """Sk(X + t) = Sk(X) .* exp(-i w^T t) — characteristic-function law."""
+        key = jax.random.PRNGKey(seed)
+        kx, kw = jax.random.split(key)
+        x = jax.random.normal(kx, (40, 3))
+        w = _freqs(kw, 3, 10)
+        t = jnp.full((3,), shift)
+        z0 = np.asarray(sk.sketch_complex(x, w))
+        z1 = np.asarray(sk.sketch_complex(x + t, w))
+        phase = np.exp(-1j * np.asarray(t @ w))
+        np.testing.assert_allclose(z1, z0 * phase, atol=1e-4)
+
+
+class TestFrequencies:
+    def test_shapes_and_dtype(self, rng):
+        for dist in ("adapted_radius", "gaussian", "folded_gaussian"):
+            w = fq.draw_frequencies(rng, 64, 7, 2.0, dist)
+            assert w.shape == (7, 64) and w.dtype == jnp.float32
+
+    def test_adapted_radius_scale_invariance(self, rng):
+        """Radii scale as 1/sigma: doubling sigma halves the radius quantiles."""
+        w1 = fq.draw_frequencies(rng, 4096, 5, 1.0)
+        w2 = fq.draw_frequencies(rng, 4096, 5, 4.0)
+        r1 = np.median(np.linalg.norm(np.asarray(w1), axis=0))
+        r2 = np.median(np.linalg.norm(np.asarray(w2), axis=0))
+        np.testing.assert_allclose(r1 / r2, 2.0, rtol=0.1)
+
+    def test_directions_isotropic(self, rng):
+        w = np.asarray(fq.draw_frequencies(rng, 8192, 3, 1.0))
+        dirs = w / np.linalg.norm(w, axis=0, keepdims=True)
+        np.testing.assert_allclose(dirs.mean(axis=1), np.zeros(3), atol=0.05)
+
+    def test_sigma2_estimation_order_of_magnitude(self):
+        """On unit-variance clusters the estimate lands within ~[0.3, 10]."""
+        from repro.data import synthetic
+
+        key = jax.random.PRNGKey(1)
+        x = synthetic.gaussian_mixture(key, 4000, k=5, n=6, c=3.0)
+        s2 = float(fq.estimate_sigma2(jax.random.PRNGKey(2), x))
+        assert 0.2 < s2 < 20.0
