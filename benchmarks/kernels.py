@@ -16,7 +16,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line, save, timed
+from repro.core import engine as eng_mod
+from repro.core import sketch as core_sk
 from repro.kernels import ops, ref
+
+
+def run_engine_backends(results: dict, n_pts=4096, feat=16, m=1024):
+    """SketchEngine backend matrix on one shape: parity vs the reference
+    sketch + wall time of each backend's actual CPU execution path (pallas
+    interpret mode is excluded from timing — it is a correctness mode)."""
+    key = jax.random.PRNGKey(7)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (n_pts, feat))
+    w = jax.random.normal(kw, (feat, m))
+    z_ref = np.asarray(core_sk.sketch(x, w))
+    engines = {
+        "xla": eng_mod.SketchEngine(w, "xla"),
+        "pallas": eng_mod.SketchEngine(w, "pallas", block_n=512, block_m=256),
+    }
+    for name, e in engines.items():
+        z, _, _ = e.sketch(x[:2048] if name == "pallas" else x)
+        ref_z = np.asarray(core_sk.sketch(x[:2048], w)) if name == "pallas" else z_ref
+        err = float(np.max(np.abs(np.asarray(z) - ref_z)))
+        row = {"parity_max_err": err}
+        if name == "xla":
+            _, t = timed(lambda: e.sketch(x))
+            _, t = timed(lambda: e.sketch(x))  # warm
+            row["seconds"] = t
+            csv_line(f"engine_{name}_N{n_pts}_m{m}", t, f"err={err:.2e}")
+        else:
+            csv_line(f"engine_{name}_N{n_pts}_m{m}", 0.0, f"err={err:.2e}")
+        results[f"engine_{name}"] = row
+        assert err < 1e-4, (name, err)
+    return results
 
 
 def run(full: bool = False):
@@ -74,6 +106,7 @@ def run(full: bool = False):
         }
         csv_line(name, t_ref, f"agree={agree:.4f};traffic_x{unfused/fused:.1f}")
         assert agree == 1.0
+    run_engine_backends(results)
     save("kernels", results)
     return results
 

@@ -2,14 +2,19 @@
 through the full distributed pipeline.
 
     PYTHONPATH=src python examples/full_pipeline.py [--n 1000000]
+                                                    [--backend sharded|xla|pallas]
 
 Stages (all from the library, nothing bespoke):
 1. 8 placeholder devices, (4 data x 2 model) mesh;
-2. the dataset is sharded over the data axis and sketched with ONE
-   psum-merged pass (core.distributed_sketch) — O(m) cross-device traffic;
+2. the dataset is sketched in ONE pass through the unified SketchEngine —
+   backend is a flag: "sharded" (shard_map + psum-merge over the data axis,
+   O(m) cross-device traffic), "xla" (chunked scan) or "pallas" (fused
+   kernel; interpret mode off-TPU);
 3. CLOMPR decodes K centroids from the sketch alone;
-4. Lloyd-Max x5 runs on the gathered data as the reference;
-5. wall-clock + quality comparison (paper Fig. 4 protocol, container scale).
+4. a second, *streaming* CKM fit consumes the same data as a chunked
+   iterator (ckm.fit_streaming) — out-of-core one-pass path;
+5. Lloyd-Max x5 runs on the gathered data as the reference;
+6. wall-clock + quality comparison (paper Fig. 4 protocol, container scale).
 """
 
 import os
@@ -22,7 +27,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import ckm, distributed_sketch as ds, lloyd
+from repro.core import ckm, lloyd
+from repro.core.engine import BACKENDS
+from repro.data import pipeline as pipe
 from repro.data import synthetic
 
 
@@ -31,6 +38,10 @@ def main():
     ap.add_argument("--n", type=int, default=1_000_000)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--backend", choices=BACKENDS, default="sharded")
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="also run the one-pass streaming fit at this chunk "
+                         "size (0 = skip)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -39,21 +50,26 @@ def main():
         kd, args.n, args.k, args.dim, return_labels=True
     )
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
-    xs = ds.shard_points(x, mesh, ("data",))
-
-    cfg = ckm.CKMConfig(k=args.k)
+    cfg = ckm.CKMConfig(k=args.k, sketch_backend=args.backend)
     m = cfg.sketch_size(args.dim)
     from repro.core import frequencies as fq
 
     sigma2 = fq.estimate_sigma2(kf, x[:2048])
     freqs = fq.draw_frequencies(kf, m, args.dim, sigma2)
 
+    mesh = None
+    xin = x
+    if args.backend == "sharded":
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+    engine = ckm.make_engine(freqs, cfg, mesh)
+    if args.backend == "sharded":
+        xin = engine.shard_points(x)
+
     t0 = time.perf_counter()
-    z, lo, hi = ds.sharded_sketch(xs, freqs, mesh, ("data",))
+    z, lo, hi = engine.sketch(xin)
     jax.block_until_ready(z)
     t_sketch = time.perf_counter() - t0
-    print(f"[1] distributed sketch: {t_sketch:.2f}s  (m={m}, one pass, psum-merged)")
+    print(f"[1] {args.backend} sketch: {t_sketch:.2f}s  (m={m}, one pass)")
 
     t0 = time.perf_counter()
     cents, alphas, cost = ckm.decode_sketch(kdec, z, freqs, lo, hi, cfg)
@@ -61,6 +77,18 @@ def main():
     t_decode = time.perf_counter() - t0
     sse_ckm = float(ckm.sse(x, cents)) / args.n
     print(f"[2] CKM decode (sketch only): {t_decode:.2f}s  SSE/N={sse_ckm:.4f}")
+
+    if args.stream_chunk > 0:
+        t0 = time.perf_counter()
+        res = ckm.fit_streaming(
+            key, pipe.chunked(x, args.stream_chunk), cfg, mesh
+        )
+        jax.block_until_ready(res.centroids)
+        t_stream = time.perf_counter() - t0
+        print(
+            f"[2b] streaming fit ({args.stream_chunk}-pt chunks): "
+            f"{t_stream:.2f}s  SSE/N={float(ckm.sse(x, res.centroids))/args.n:.4f}"
+        )
 
     t0 = time.perf_counter()
     base = lloyd.kmeans(

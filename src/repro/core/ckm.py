@@ -5,8 +5,9 @@ The pipeline is exactly the paper's four steps:
 1. choose a frequency scale sigma^2 on a small fraction of the data
    (``frequencies.estimate_sigma2``),
 2. draw ``m`` frequencies i.i.d. from the adapted-radius distribution,
-3. compute the sketch ``z = Sk(X, 1/N)`` (one pass; distributed/streaming via
-   ``core.distributed_sketch``) together with the box bounds ``l, u``,
+3. compute the sketch ``z = Sk(X, 1/N)`` (one pass, through the unified
+   ``core.engine.SketchEngine`` — xla / pallas / sharded backends; streaming
+   via ``fit_streaming``) together with the box bounds ``l, u``,
 4. decode K centroids from the sketch with CLOMPR (``core.clompr``).
 
 Replicates are ``vmap``-ed over PRNG keys and selected by the value of the
@@ -17,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import frequencies as freq_mod
 from repro.core import sketch as sk
 from repro.core.clompr import CLOMPRConfig, clompr
+from repro.core.engine import SketchEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +48,10 @@ class CKMConfig:
     final_steps: int = 1000
     merge_radius_scale: float = 2.5
     sketch_chunk: int = 8192
+    # Sketch-computation backend: "xla" | "pallas" | "sharded" (see
+    # core.engine.SketchEngine's backend matrix).  "sharded" needs a mesh
+    # passed to fit()/compute_sketch().
+    sketch_backend: str = "xla"
 
     def sketch_size(self, n: int) -> int:
         return self.m if self.m is not None else 10 * self.k * n
@@ -75,22 +81,61 @@ class CKMResult(NamedTuple):
     bounds: tuple[jax.Array, jax.Array]
 
 
-def compute_sketch(
-    key: jax.Array, x: jax.Array, cfg: CKMConfig
-) -> tuple[jax.Array, jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
-    """Steps 1–3: scale estimation, frequency draw, one-pass sketch + bounds."""
-    x = jnp.asarray(x, jnp.float32)
-    n = x.shape[1]
+def make_engine(w: jax.Array, cfg: CKMConfig, mesh=None) -> SketchEngine:
+    """The SketchEngine for ``cfg`` — backend choice is a config flag."""
+    return SketchEngine(
+        w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh
+    )
+
+
+def _draw_freqs(key, sample: jax.Array, n: int, cfg: CKMConfig):
+    """Steps 1–2 on a data sample: scale estimation + frequency draw."""
     k_sig, k_freq = jax.random.split(key)
     if cfg.sigma2 is None:
-        take = min(cfg.sigma2_sample, x.shape[0])
-        sigma2 = freq_mod.estimate_sigma2(k_sig, x[:take])
+        take = min(cfg.sigma2_sample, sample.shape[0])
+        sigma2 = freq_mod.estimate_sigma2(k_sig, sample[:take])
     else:
         sigma2 = jnp.asarray(cfg.sigma2, jnp.float32)
     w = freq_mod.draw_frequencies(k_freq, cfg.sketch_size(n), n, sigma2, cfg.freq_dist)
-    z = sk.sketch(x, w, chunk=cfg.sketch_chunk)
-    bounds = sk.data_bounds(x)
-    return z, w, sigma2, bounds
+    return w, sigma2
+
+
+def compute_sketch(
+    key: jax.Array, x: jax.Array, cfg: CKMConfig, mesh=None
+) -> tuple[jax.Array, jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
+    """Steps 1–3: scale estimation, frequency draw, one-pass sketch + bounds.
+
+    The sketch pass runs through the unified engine; ``cfg.sketch_backend``
+    selects xla / pallas / sharded (``mesh`` required for sharded).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w, sigma2 = _draw_freqs(key, x, x.shape[1], cfg)
+    z, lo, hi = make_engine(w, cfg, mesh).sketch(x)
+    return z, w, sigma2, (lo, hi)
+
+
+def compute_sketch_streaming(
+    key: jax.Array, batches: Iterable[jax.Array], cfg: CKMConfig, mesh=None
+) -> tuple[jax.Array, jax.Array, jax.Array, tuple[jax.Array, jax.Array], jax.Array]:
+    """One-pass sketch of an out-of-core batch iterator.
+
+    The first batch doubles as the sigma^2-estimation sample (paper step 1
+    uses "a small fraction of the data"); every batch — the first included —
+    is then folded into the engine state.  Returns the first batch as the
+    last element so callers may reuse it for sample/kpp decoder inits.
+    """
+    it = iter(batches)
+    try:
+        first = jnp.asarray(next(it), jnp.float32)
+    except StopIteration:
+        raise ValueError("compute_sketch_streaming needs at least one batch")
+    w, sigma2 = _draw_freqs(key, first, first.shape[1], cfg)
+    eng = make_engine(w, cfg, mesh)
+    state = eng.update(eng.init_state(), first)
+    for batch in it:
+        state = eng.update(state, batch)
+    z, lo, hi = eng.finalize(state)
+    return z, w, sigma2, (lo, hi), first
 
 
 def decode_sketch(
@@ -102,29 +147,58 @@ def decode_sketch(
     cfg: CKMConfig,
     x_init: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Step 4: CLOMPR decoding, with replicates selected by the cost (4)."""
+    """Step 4: CLOMPR decoding, with replicates selected by the cost (4).
+
+    Replicate r uses ``fold_in(key, r)``, so the replicate-key sequence for
+    R replicates is a prefix of the sequence for R' > R, and replicates run
+    sequentially via ``lax.map`` (the *unbatched* decoder trace — identical
+    numerics to a single run).  Together these make replicate selection
+    monotone: more replicates can never return a higher cost.
+    """
     ccfg = cfg.clompr_config()
-    keys = jax.random.split(key, cfg.replicates)
+    keys = jnp.stack(
+        [jax.random.fold_in(key, r) for r in range(cfg.replicates)]
+    )
     if cfg.replicates == 1:
         return clompr(keys[0], z, w, lower, upper, ccfg, x_init)
     run = functools.partial(clompr, cfg=ccfg)
     if x_init is None:
-        cents, alphas, costs = jax.vmap(
-            lambda k_: run(k_, z, w, lower, upper)
-        )(keys)
+        cents, alphas, costs = jax.lax.map(
+            lambda k_: run(k_, z, w, lower, upper), keys
+        )
     else:
-        cents, alphas, costs = jax.vmap(
-            lambda k_: run(k_, z, w, lower, upper, x_init=x_init)
-        )(keys)
+        cents, alphas, costs = jax.lax.map(
+            lambda k_: run(k_, z, w, lower, upper, x_init=x_init), keys
+        )
     best = jnp.argmin(costs)
     return cents[best], alphas[best], costs[best]
 
 
-def fit(key: jax.Array, x: jax.Array, cfg: CKMConfig) -> CKMResult:
+def fit(key: jax.Array, x: jax.Array, cfg: CKMConfig, mesh=None) -> CKMResult:
     """End-to-end compressive K-means on an in-memory dataset."""
     k_sketch, k_dec = jax.random.split(key)
-    z, w, sigma2, (lo, hi) = compute_sketch(k_sketch, x, cfg)
+    z, w, sigma2, (lo, hi) = compute_sketch(k_sketch, x, cfg, mesh)
     x_init = x if cfg.init in ("sample", "kpp") else None
+    cents, alphas, cost = decode_sketch(k_dec, z, w, lo, hi, cfg, x_init)
+    return CKMResult(cents, alphas, cost, sigma2, w, z, (lo, hi))
+
+
+def fit_streaming(
+    key: jax.Array, batches: Iterable[jax.Array], cfg: CKMConfig, mesh=None
+) -> CKMResult:
+    """End-to-end CKM over an out-of-core iterator of ``(B_i, n)`` batches.
+
+    One pass, O(m) memory: each batch is folded into the engine state and may
+    be discarded immediately — the dataset never has to fit in memory, which
+    is the paper's whole point (cost after sketching is N-independent).  The
+    "sample"/"kpp" decoder inits draw from the *first* batch only (the rest
+    of the stream is gone by decode time).
+    """
+    k_sketch, k_dec = jax.random.split(key)
+    z, w, sigma2, (lo, hi), first = compute_sketch_streaming(
+        k_sketch, batches, cfg, mesh
+    )
+    x_init = first if cfg.init in ("sample", "kpp") else None
     cents, alphas, cost = decode_sketch(k_dec, z, w, lo, hi, cfg, x_init)
     return CKMResult(cents, alphas, cost, sigma2, w, z, (lo, hi))
 

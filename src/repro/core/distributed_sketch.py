@@ -1,5 +1,12 @@
 """Distributed / streaming sketch computation.
 
+NOTE: the canonical mergeable-sketch API is now
+:class:`repro.core.engine.SketchEngine` (init/update/merge/finalize over a
+commutative-monoid state, with xla/pallas/sharded backends).  This module
+keeps the original ``SketchState`` pytree because it rides train-loop
+checkpoints (train/monitor.py, data/clustering.py) — its layout is frozen —
+and ``sharded_sketch`` here delegates to the engine's sharded backend.
+
 The sketch is *linear in the empirical distribution*: sketches of dataset
 shards simply average (weighted by shard sizes).  This file provides
 
@@ -93,36 +100,17 @@ def sharded_sketch(
 
     ``x: (N, n)`` is sharded along N over ``data_axes`` (any other mesh axes
     hold replicas).  Returns the *replicated* ``(z, lo, hi)``.
+
+    Thin wrapper over the unified :class:`repro.core.engine.SketchEngine`
+    (backend="sharded") — the mesh psum-merge IS the engine's ``merge``
+    expressed as a collective.
     """
-    axes = tuple(data_axes)
-    xspec = P(axes)  # shard N over the data axes
-    n = x.shape[1]
+    from repro.core.engine import SketchEngine
 
-    def local(x_shard, w_rep):
-        part = sk.sketch(
-            x_shard,
-            w_rep,
-            weights=jnp.ones((x_shard.shape[0],), jnp.float32),
-            chunk=chunk,
-            vary_axes=axes,
-        )
-        cnt = jnp.asarray(x_shard.shape[0], jnp.float32)
-        lo = jnp.min(x_shard, axis=0)
-        hi = jnp.max(x_shard, axis=0)
-        # Merge across the data axes — O(m) traffic, independent of N.
-        part = jax.lax.psum(part, axes)
-        cnt = jax.lax.psum(cnt, axes)
-        lo = jax.lax.pmin(lo, axes)
-        hi = jax.lax.pmax(hi, axes)
-        return part / cnt, lo, hi
-
-    fn = jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(xspec, P()),
-        out_specs=(P(), P(), P()),
+    eng = SketchEngine(
+        w, "sharded", chunk=chunk, mesh=mesh, data_axes=tuple(data_axes)
     )
-    return fn(x, w)
+    return eng.sketch(x)
 
 
 def shard_points(x: jax.Array, mesh: Mesh, data_axes: Sequence[str] = ("data",)):

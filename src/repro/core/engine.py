@@ -1,0 +1,277 @@
+"""Unified streaming SketchEngine — one mergeable-sketch API, three backends.
+
+The paper's central object is the sketch ``z = Sk(X, 1/N)``: a one-pass,
+*linear* summary of the empirical distribution.  Linearity makes the partial
+sums a **commutative monoid**: any way of splitting the data over batches,
+devices, or hosts and any order of combining the partials yields the same
+sketch.  This module is the single implementation of that contract; every
+producer (in-memory, streaming, distributed) and every consumer (CLOMPR,
+monitors, the data balancer) goes through it.
+
+Mergeable-state contract
+------------------------
+``SketchEngineState(cos_acc, sin_acc, weight_sum, lower, upper, count)`` with
+
+- identity:      ``init_state()`` (zero sums, ``+inf/-inf`` bounds),
+- ``update``:    fold one weighted batch into a state (one pass, O(m) memory),
+- ``merge``:     elementwise combine — **associative and commutative**, so
+                 states may be combined across batches/devices/hosts in any
+                 order (tree reductions, psum, delayed stragglers all legal),
+- ``finalize``:  normalise to the paper's sketch:  ``z = sums / weight_sum``
+                 (stacked-real ``[sum b cos, -sum b sin] / sum b``), plus the
+                 CLOMPR box bounds ``(lower, upper)`` harvested in the same
+                 pass.
+
+Backend matrix
+--------------
+=========  ==================================================================
+backend    update path
+=========  ==================================================================
+xla        ``core.sketch.sketch`` — chunked ``lax.scan``; the (N, m)
+           projection never materialises.  Runs everywhere; the default.
+pallas     ``kernels.ops.fourier_sketch_sums`` — fused MXU+VPU TPU kernel
+           (projection tile stays in VMEM).  Inputs are auto-padded to tile
+           alignment (N→block_n, n→8, m→block_m); off-TPU the kernel body
+           runs in ``interpret=True`` mode for correctness.
+sharded    ``shard_map`` over a device mesh: every device sketches its local
+           shard, one ``psum/pmin/pmax`` merges — O(m) cross-device traffic,
+           independent of N.  Requires ``mesh=``; uses the version-compat
+           shim in ``utils.compat`` (old and new ``shard_map`` APIs).
+=========  ==================================================================
+
+All three backends produce identical sketches (within float tolerance) — the
+tier-1 suite asserts pairwise parity at 1e-4 on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sketch as sk
+from repro.utils import compat
+
+__all__ = ["SketchEngineState", "SketchEngine", "BACKENDS"]
+
+BACKENDS = ("xla", "pallas", "sharded")
+
+
+class SketchEngineState(NamedTuple):
+    """Commutative-monoid accumulator of the one-pass sketch statistics."""
+
+    cos_acc: jax.Array  # (m,) f32 — sum_l beta_l cos(w^T y_l), unnormalised
+    sin_acc: jax.Array  # (m,) f32 — sum_l beta_l sin(w^T y_l), unnormalised
+    weight_sum: jax.Array  # () f32 — sum of weights folded in so far
+    lower: jax.Array  # (n,) f32 — running per-coordinate min
+    upper: jax.Array  # (n,) f32 — running per-coordinate max
+    count: jax.Array  # () f32 — number of points folded in
+
+
+@jax.jit
+def _merge_states(a: SketchEngineState, b: SketchEngineState) -> SketchEngineState:
+    return SketchEngineState(
+        cos_acc=a.cos_acc + b.cos_acc,
+        sin_acc=a.sin_acc + b.sin_acc,
+        weight_sum=a.weight_sum + b.weight_sum,
+        lower=jnp.minimum(a.lower, b.lower),
+        upper=jnp.maximum(a.upper, b.upper),
+        count=a.count + b.count,
+    )
+
+
+@jax.jit
+def _finalize_state(state: SketchEngineState):
+    denom = jnp.maximum(state.weight_sum, 1e-30)
+    z = jnp.concatenate([state.cos_acc, -state.sin_acc]) / denom
+    return z, state.lower, state.upper
+
+
+class SketchEngine:
+    """Streaming/mergeable sketch computation over pluggable backends.
+
+    Parameters
+    ----------
+    w : (n, m) frequency matrix (``core.frequencies.draw_frequencies``).
+    backend : one of ``BACKENDS`` — see the backend matrix in the module doc.
+    chunk : scan chunk for the xla/sharded backends.
+    block_n, block_m : Pallas tile sizes (pallas backend).
+    interpret : force Pallas interpret mode (None = auto: interpret off-TPU).
+    mesh, data_axes : device mesh + data axes (sharded backend only).  Batches
+        passed to ``update`` must be shardable along their leading axis.
+    """
+
+    def __init__(
+        self,
+        w: jax.Array,
+        backend: str = "xla",
+        *,
+        chunk: int = 8192,
+        block_n: int = 1024,
+        block_m: int = 512,
+        interpret: bool | None = None,
+        mesh: Mesh | None = None,
+        data_axes: Sequence[str] = ("data",),
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if backend == "sharded" and mesh is None:
+            raise ValueError("backend='sharded' requires a mesh")
+        self.w = jnp.asarray(w, jnp.float32)
+        self.n, self.m = self.w.shape
+        self.backend = backend
+        self.chunk = chunk
+        self.block_n = block_n
+        self.block_m = block_m
+        self.interpret = interpret
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+
+    # -- monoid ops ---------------------------------------------------------
+
+    def init_state(self) -> SketchEngineState:
+        """The monoid identity: merge(init_state(), s) == s for any s."""
+        return SketchEngineState(
+            cos_acc=jnp.zeros((self.m,), jnp.float32),
+            sin_acc=jnp.zeros((self.m,), jnp.float32),
+            weight_sum=jnp.zeros((), jnp.float32),
+            lower=jnp.full((self.n,), jnp.inf, jnp.float32),
+            upper=jnp.full((self.n,), -jnp.inf, jnp.float32),
+            count=jnp.zeros((), jnp.float32),
+        )
+
+    def update(
+        self,
+        state: SketchEngineState,
+        batch: jax.Array,
+        weights: jax.Array | None = None,
+    ) -> SketchEngineState:
+        """Fold ``batch: (B, n)`` into ``state``.  ``weights`` default to 1
+        per point, so streaming batches of any size weight points equally."""
+        x = jnp.asarray(batch, jnp.float32)
+        b = x.shape[0]
+        if weights is None:
+            weights = jnp.ones((b,), jnp.float32)
+        else:
+            weights = jnp.asarray(weights, jnp.float32)
+        part = self._batch_state(x, weights)
+        return _merge_states(state, part)
+
+    def merge(self, a: SketchEngineState, b: SketchEngineState) -> SketchEngineState:
+        """Associative + commutative combine of two partial states."""
+        return _merge_states(a, b)
+
+    def finalize(self, state: SketchEngineState):
+        """-> ``(z stacked-real (2m,), lower (n,), upper (n,))``."""
+        return _finalize_state(state)
+
+    # -- conveniences -------------------------------------------------------
+
+    def sketch(self, x: jax.Array, weights: jax.Array | None = None):
+        """One-shot ``(z, lower, upper)`` — init/update/finalize in one call."""
+        return self.finalize(self.update(self.init_state(), x, weights))
+
+    def sketch_stream(self, batches: Iterable[jax.Array]):
+        """One pass over an iterator of ``(B_i, n)`` batches -> (z, lo, hi)."""
+        state = self.init_state()
+        for batch in batches:
+            state = self.update(state, batch)
+        return self.finalize(state)
+
+    # -- backend dispatch ---------------------------------------------------
+
+    def _batch_state(self, x: jax.Array, weights: jax.Array) -> SketchEngineState:
+        if self.backend == "sharded":
+            return self._sharded_batch_state(x, weights)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            cos_s, sin_s = ops.fourier_sketch_sums(
+                x,
+                self.w,
+                weights,
+                block_n=self.block_n,
+                block_m=self.block_m,
+                interpret=self.interpret,
+            )
+        else:  # xla
+            part = sk.sketch(
+                x, self.w, weights=weights, chunk=min(self.chunk, max(x.shape[0], 1))
+            )
+            cos_s, sin_s = part[: self.m], -part[self.m :]
+        return SketchEngineState(
+            cos_acc=cos_s,
+            sin_acc=sin_s,
+            weight_sum=jnp.sum(weights),
+            lower=jnp.min(x, axis=0),
+            upper=jnp.max(x, axis=0),
+            count=jnp.asarray(x.shape[0], jnp.float32),
+        )
+
+    def _sharded_batch_state(self, x: jax.Array, weights: jax.Array) -> SketchEngineState:
+        axes = self.data_axes
+        chunk = self.chunk
+        b = x.shape[0]
+        # shard_map needs the leading axis divisible by the data-axis extent;
+        # streaming batches (ragged tail chunks) generally aren't.  Pad with
+        # zero-weight copies of the first row: weight 0 keeps the sums exact
+        # and a copied point cannot move the min/max bounds.  True count is
+        # taken from the unpadded batch below.
+        extent = 1
+        for a in axes:
+            extent *= self.mesh.shape[a]
+        pad = (-b) % extent
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (pad, x.shape[1]))], axis=0
+            )
+            weights = jnp.concatenate(
+                [weights, jnp.zeros((pad,), jnp.float32)], axis=0
+            )
+
+        def local(x_shard, w_rep, wt_shard):
+            part = sk.sketch(
+                x_shard,
+                w_rep,
+                weights=wt_shard,
+                chunk=min(chunk, max(x_shard.shape[0], 1)),
+                vary_axes=axes,
+            )
+            m = w_rep.shape[1]
+            cos_s = jax.lax.psum(part[:m], axes)
+            sin_s = jax.lax.psum(-part[m:], axes)
+            wsum = jax.lax.psum(jnp.sum(wt_shard), axes)
+            lo = jax.lax.pmin(jnp.min(x_shard, axis=0), axes)
+            hi = jax.lax.pmax(jnp.max(x_shard, axis=0), axes)
+            return cos_s, sin_s, wsum, lo, hi
+
+        fn = compat.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(axes), P(), P(axes)),
+            out_specs=(P(), P(), P(), P(), P()),
+        )
+        cos_s, sin_s, wsum, lo, hi = fn(x, self.w, weights)
+        return SketchEngineState(
+            cos_s, sin_s, wsum, lo, hi, jnp.asarray(b, jnp.float32)
+        )
+
+    def shard_points(self, x: jax.Array) -> jax.Array:
+        """Place ``x`` with its leading axis sharded over the data axes.
+
+        When N is not divisible by the data-axis extent the array is left
+        where it is — ``update`` zero-weight pads and reshards internally,
+        so placement here is a locality optimisation, not a requirement.
+        """
+        assert self.mesh is not None
+        from jax.sharding import NamedSharding
+
+        extent = 1
+        for a in self.data_axes:
+            extent *= self.mesh.shape[a]
+        if x.shape[0] % extent:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, P(self.data_axes)))

@@ -22,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.utils import compat
+
 __all__ = [
     "sketch",
     "sketch_complex",
@@ -91,7 +93,7 @@ def sketch(
 
     acc0 = jnp.zeros((m,), jnp.float32)
     if vary_axes:
-        acc0 = jax.lax.pcast(acc0, vary_axes, to="varying")
+        acc0 = compat.pvary(acc0, vary_axes)
     (cos_acc, sin_acc), _ = jax.lax.scan(body, (acc0, acc0), (xs, ws_))
     return _stacked(cos_acc, sin_acc)
 

@@ -108,3 +108,20 @@ class SyntheticLM:
             batch.update(meta)
             yield batch
             step += 1
+
+    def embedding_stream(self, start_step: int, steps: int) -> Iterator[jax.Array]:
+        """Document-embedding batches only — a point stream for the streaming
+        SketchEngine / ``ckm.fit_streaming`` (each batch is f(seed, step), so
+        the stream is restartable and shardable like everything else)."""
+        for step in range(start_step, start_step + steps):
+            yield self.batch(step)["_doc_embeds"]
+
+
+def chunked(x, size: int) -> Iterator[jax.Array]:
+    """View an in-memory ``(N, n)`` array as a batch iterator of ``size``-row
+    chunks (last chunk ragged) — adapts datasets to the one-pass streaming
+    API; also the reference harness for streaming-vs-in-memory parity tests."""
+    if size <= 0:
+        raise ValueError(f"chunk size must be positive, got {size}")
+    for i in range(0, x.shape[0], size):
+        yield x[i : i + size]

@@ -34,25 +34,24 @@ def _pad_to(a: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
-def fourier_sketch(
+def fourier_sketch_sums(
     x: jax.Array,
     w: jax.Array,
-    beta: jax.Array | None = None,
+    beta: jax.Array,
     block_n: int = 1024,
     block_m: int = 512,
     interpret: bool | None = None,
-) -> jax.Array:
-    """Fused sketch -> stacked-real ``(2m,)``: [sum b cos(xW), -sum b sin(xW)].
+) -> tuple[jax.Array, jax.Array]:
+    """Raw fused sums ``(sum b cos(xW) (m,), sum b sin(xW) (m,))``.
 
-    Drop-in replacement for ``core.sketch.sketch`` (same convention).  ``beta``
-    defaults to uniform ``1/N``.
+    The mergeable-state entrypoint used by ``core.engine`` (pallas backend):
+    no ``1/N`` normalisation, no stacked-real packaging.  Handles all TPU
+    padding/alignment; off-TPU the kernel runs in interpret mode.
     """
     if interpret is None:
         interpret = _on_cpu()
     n_pts = x.shape[0]
     m = w.shape[1]
-    if beta is None:
-        beta = jnp.full((n_pts,), 1.0 / n_pts, jnp.float32)
     x = jnp.asarray(x, jnp.float32)
     w = jnp.asarray(w, jnp.float32)
     beta = jnp.asarray(beta, jnp.float32).reshape(-1, 1)
@@ -67,7 +66,29 @@ def fourier_sketch(
     cos_s, sin_s = _sketch.fourier_sketch_kernel(
         x, w, beta, block_n=block_n, block_m=block_m, interpret=interpret
     )
-    return jnp.concatenate([cos_s[0, :m], -sin_s[0, :m]])
+    return cos_s[0, :m], sin_s[0, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def fourier_sketch(
+    x: jax.Array,
+    w: jax.Array,
+    beta: jax.Array | None = None,
+    block_n: int = 1024,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused sketch -> stacked-real ``(2m,)``: [sum b cos(xW), -sum b sin(xW)].
+
+    Drop-in replacement for ``core.sketch.sketch`` (same convention).  ``beta``
+    defaults to uniform ``1/N``.
+    """
+    if beta is None:
+        beta = jnp.full((x.shape[0],), 1.0 / x.shape[0], jnp.float32)
+    cos_s, sin_s = fourier_sketch_sums(
+        x, w, beta, block_n=block_n, block_m=block_m, interpret=interpret
+    )
+    return jnp.concatenate([cos_s, -sin_s])
 
 
 @functools.partial(

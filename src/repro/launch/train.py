@@ -21,6 +21,7 @@ from repro.configs.base import ModelConfig, ShapeConfig, get_config
 from repro.models import transformer as tfm
 from repro.optim.optimizers import OptConfig, Optimizer, make_optimizer
 from repro.parallel import sharding as sh
+from repro.utils import compat
 
 
 def default_opt_config(cfg: ModelConfig) -> OptConfig:
@@ -127,7 +128,7 @@ def build_compressed_train_step(
 
     def train_step(state, batch):
         batch_in = {k: P("pod") for k in batch}
-        sharded = jax.shard_map(
+        sharded = compat.shard_map(
             grads_fn,
             mesh=mesh,
             in_specs=(P(), batch_in, pod_specs(state["err"], True)),

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import _dense_init
+from repro.utils import compat
 
 Params = dict[str, Any]
 
@@ -225,7 +226,7 @@ def moe_apply(
     if not shardable:
         t_local = b * s
         capacity = _capacity(t_local, dims)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(batch_spec, P(), P(expert_axis), P(expert_axis), P(expert_axis)),

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils import compat
+
 
 def pipeline_apply(
     stage_fn,
@@ -49,8 +51,8 @@ def pipeline_apply(
         stage = jax.lax.axis_index(axis)
         mb_shape = xs.shape[1:]
         # carry/out differ per stage -> mark them varying over the pipe axis
-        carry = jax.lax.pcast(jnp.zeros(mb_shape, xs.dtype), axis, to="varying")
-        out = jax.lax.pcast(jnp.zeros_like(xs), axis, to="varying")
+        carry = compat.pvary(jnp.zeros(mb_shape, xs.dtype), axis)
+        out = compat.pvary(jnp.zeros_like(xs), axis)
 
         def tick(t, state):
             carry, out = state
@@ -80,7 +82,7 @@ def pipeline_apply(
         return out
 
     param_specs = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(param_specs, P()),

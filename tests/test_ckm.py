@@ -23,6 +23,7 @@ def _match_errors(truth, cents):
     return np.array(errs)
 
 
+@pytest.mark.slow
 class TestCKMRecovery:
     def test_recovers_separated_clusters(self, gaussian_blobs):
         """On well-separated blobs CKM must localise every true mean."""
@@ -85,6 +86,7 @@ class TestCKMRecovery:
         assert np.all(errs < 1.2), errs
 
 
+@pytest.mark.slow
 class TestLloyd:
     def test_recovers_separated_clusters(self, gaussian_blobs):
         x, _, means = gaussian_blobs

@@ -95,6 +95,7 @@ class TestHloAnalyzer:
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P
             from repro.utils import hlo
+            from repro.utils.compat import shard_map
 
             mesh = jax.make_mesh((4,), ("d",))
             steps, n = 6, 1024
@@ -105,7 +106,7 @@ class TestHloAnalyzer:
                 y, _ = jax.lax.scan(body, x, None, length=steps)
                 return y
 
-            fn = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())
+            fn = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())
             c = jax.jit(fn).lower(jax.ShapeDtypeStruct((n,), jnp.float32)).compile()
             costs = hlo.analyze_compiled(c)
             expect = steps * n * 4

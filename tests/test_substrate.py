@@ -200,6 +200,7 @@ _TRAIN_LOOP = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 class TestTrainLoopFaultTolerance:
     def test_checkpoint_restart_matches_uninterrupted(self, tmp_path):
         """Train 6 steps straight vs 3 + restart + 3: identical final loss."""
@@ -232,6 +233,7 @@ class TestGradCompression:
             from jax.sharding import PartitionSpec as P
             from repro.optim.grad_compression import (
                 compress_allreduce_tree, init_error_state)
+            from repro.utils.compat import shard_map
 
             mesh = jax.make_mesh((2, 2), ("pod", "data"))
             n = 4096
@@ -242,7 +244,7 @@ class TestGradCompression:
             def body(g, e):
                 return compress_allreduce_tree({"g": g[0]}, {"g": e}, "pod")
 
-            fn = jax.shard_map(body, mesh=mesh,
+            fn = shard_map(body, mesh=mesh,
                                in_specs=(P("pod"), P("pod")),
                                out_specs=({"g": P()}, {"g": P("pod")}),
                                axis_names={"pod"}, check_vma=True)
