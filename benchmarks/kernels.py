@@ -6,7 +6,10 @@ so wall-clock speedups are NOT meaningful; what we report per kernel is
 - the HBM-traffic model: bytes moved by the unfused jnp path (projection
   matrix materialised) vs the fused kernel (inputs+outputs only), which is
   the quantity the TPU roofline converts into time.
-Also times the jnp fallback paths (the actual CPU execution path).
+Also times the jnp fallback paths (the actual CPU execution path), and
+reports the QCKM rows: dequantization error of the quantized sketch and the
+sketch bytes-on-the-wire per backend (float vs minimal-width integer
+accumulators) — the bandwidth the quantized subsystem saves at merge time.
 """
 
 from __future__ import annotations
@@ -17,6 +20,7 @@ import numpy as np
 
 from benchmarks.common import csv_line, save, timed
 from repro.core import engine as eng_mod
+from repro.core import quantize as qz
 from repro.core import sketch as core_sk
 from repro.kernels import ops, ref
 
@@ -48,6 +52,60 @@ def run_engine_backends(results: dict, n_pts=4096, feat=16, m=1024):
             csv_line(f"engine_{name}_N{n_pts}_m{m}", 0.0, f"err={err:.2e}")
         results[f"engine_{name}"] = row
         assert err < 1e-4, (name, err)
+    return results
+
+
+def run_quantized(results: dict, n_pts=8192, feat=16, m=1024):
+    """QCKM quantized-sketch rows: dequantization error vs the float sketch,
+    bitwise xla/pallas parity of the int32 accumulators, and the
+    bytes-on-the-wire of one partial state — float f32 accumulators vs the
+    minimal-width integer accumulators (``core.quantize.state_wire_bytes``),
+    one row that applies to every backend's merge."""
+    key = jax.random.PRNGKey(3)
+    kx, kw, kd = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n_pts, feat))
+    w = jax.random.normal(kw, (feat, m)) * 0.5
+    z_ref = np.asarray(core_sk.sketch(x, w))
+    sl = 2048  # pallas interpret mode is slow: parity on a slice
+    for spec in ("1bit", "8bit"):
+        q = qz.make_quantizer(kd, m, spec)
+        e_x = eng_mod.SketchEngine(w, "xla", quantizer=q)
+        z, _, _ = e_x.sketch(x)
+        rel = float(
+            np.linalg.norm(np.asarray(z) - z_ref) / np.linalg.norm(z_ref)
+        )
+        e_p = eng_mod.SketchEngine(
+            w, "pallas", block_n=512, block_m=256, quantizer=q
+        )
+        s_x = e_x.update(e_x.init_state(), x[:sl])
+        s_p = e_p.update(e_p.init_state(), x[:sl])
+        int_mismatch = int(
+            jnp.sum(s_x.qcos_acc != s_p.qcos_acc)
+            + jnp.sum(s_x.qsin_acc != s_p.qsin_acc)
+        )
+        assert int_mismatch == 0, (spec, int_mismatch)
+        results[f"quantized_{spec}"] = {
+            "dequant_rel_l2_err": rel,
+            "pallas_int_mismatches": int_mismatch,
+        }
+        csv_line(f"quantized_{spec}_N{n_pts}_m{m}", 0.0, f"rel_err={rel:.3f}")
+    # Bytes-on-the-wire of one partial state's accumulators.  The number is a
+    # property of the state representation, not of how it was computed, so a
+    # single row applies to every backend: it is what the sharded backend's
+    # psum moves per merge, and what xla/pallas hosts ship when partials are
+    # combined off-device.
+    wire = {
+        spec: qz.state_wire_bytes(m, n_pts, bits)
+        for spec, bits in {"float": None, "1bit": 1, "8bit": 8}.items()
+    }
+    wire["reduction_1bit"] = wire["float"] / wire["1bit"]
+    wire["applies_to_backends"] = list(eng_mod.BACKENDS)
+    results["sketch_wire_bytes"] = wire
+    csv_line(
+        f"wire_N{n_pts}_m{m}", 0.0,
+        f"float={wire['float']}B;1bit={wire['1bit']}B;"
+        f"x{wire['reduction_1bit']:.1f}",
+    )
     return results
 
 
@@ -107,6 +165,7 @@ def run(full: bool = False):
         csv_line(name, t_ref, f"agree={agree:.4f};traffic_x{unfused/fused:.1f}")
         assert agree == 1.0
     run_engine_backends(results)
+    run_quantized(results)
     save("kernels", results)
     return results
 

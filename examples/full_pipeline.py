@@ -42,6 +42,9 @@ def main():
     ap.add_argument("--stream-chunk", type=int, default=0,
                     help="also run the one-pass streaming fit at this chunk "
                          "size (0 = skip)")
+    ap.add_argument("--quantize", default="none",
+                    help="universal sketch quantization (QCKM): none | 1bit "
+                         "| <b>bit — integer accumulators, cheaper merges")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -50,9 +53,13 @@ def main():
         kd, args.n, args.k, args.dim, return_labels=True
     )
 
-    cfg = ckm.CKMConfig(k=args.k, sketch_backend=args.backend)
+    cfg = ckm.CKMConfig(
+        k=args.k, sketch_backend=args.backend,
+        sketch_quantization=args.quantize,
+    )
     m = cfg.sketch_size(args.dim)
     from repro.core import frequencies as fq
+    from repro.core import quantize as qz
 
     sigma2 = fq.estimate_sigma2(kf, x[:2048])
     freqs = fq.draw_frequencies(kf, m, args.dim, sigma2)
@@ -61,7 +68,8 @@ def main():
     xin = x
     if args.backend == "sharded":
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-    engine = ckm.make_engine(freqs, cfg, mesh)
+    quantizer = ckm.make_quantizer(kf, cfg, m)
+    engine = ckm.make_engine(freqs, cfg, mesh, quantizer)
     if args.backend == "sharded":
         xin = engine.shard_points(x)
 
@@ -69,7 +77,12 @@ def main():
     z, lo, hi = engine.sketch(xin)
     jax.block_until_ready(z)
     t_sketch = time.perf_counter() - t0
-    print(f"[1] {args.backend} sketch: {t_sketch:.2f}s  (m={m}, one pass)")
+    bits = qz.parse_bits(args.quantize)
+    wire = qz.state_wire_bytes(m, args.n, bits)
+    print(
+        f"[1] {args.backend} sketch: {t_sketch:.2f}s  (m={m}, one pass, "
+        f"quantize={args.quantize}, merge wire bytes/state={wire})"
+    )
 
     t0 = time.perf_counter()
     cents, alphas, cost = ckm.decode_sketch(kdec, z, freqs, lo, hi, cfg)

@@ -10,6 +10,11 @@ The pipeline is exactly the paper's four steps:
    via ``fit_streaming``) together with the box bounds ``l, u``,
 4. decode K centroids from the sketch with CLOMPR (``core.clompr``).
 
+Beyond the paper, ``CKMConfig.sketch_quantization`` switches step 3 to the
+QCKM universally-quantized sketch (``core.quantize``): per-point 1-bit/b-bit
+integer codes, dequantized via the E[sign] correction before step 4 — CLOMPR
+itself is unchanged (see ``docs/architecture.md``).
+
 Replicates are ``vmap``-ed over PRNG keys and selected by the value of the
 sketch-domain cost (4) — the SSE is *not* available once data is discarded.
 """
@@ -24,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import frequencies as freq_mod
+from repro.core import quantize as qz
 from repro.core import sketch as sk
 from repro.core.clompr import CLOMPRConfig, clompr
 from repro.core.engine import SketchEngine
@@ -52,6 +58,12 @@ class CKMConfig:
     # core.engine.SketchEngine's backend matrix).  "sharded" needs a mesh
     # passed to fit()/compute_sketch().
     sketch_backend: str = "xla"
+    # Universal quantization of the sketch (QCKM): "none" | "1bit" | "<b>bit".
+    # Per-point contributions are quantized to integer codes of the dithered
+    # phase and accumulated in int32; finalize dequantizes via the E[sign]
+    # correction before CLOMPR decoding (see core.quantize).  Works on every
+    # backend; on "sharded" the cross-device merge psums integer accumulators.
+    sketch_quantization: str = "none"
 
     def sketch_size(self, n: int) -> int:
         return self.m if self.m is not None else 10 * self.k * n
@@ -81,10 +93,27 @@ class CKMResult(NamedTuple):
     bounds: tuple[jax.Array, jax.Array]
 
 
-def make_engine(w: jax.Array, cfg: CKMConfig, mesh=None) -> SketchEngine:
-    """The SketchEngine for ``cfg`` — backend choice is a config flag."""
+def make_quantizer(key: jax.Array, cfg: CKMConfig, m: int):
+    """The sketch quantizer for ``cfg`` (or None for the float path).
+
+    The dither key is derived by ``fold_in`` so enabling quantization does not
+    perturb the frequency/sigma2 draws — a quantized run sees the *same*
+    frequencies as its float twin under the same key.
+    """
+    if cfg.sketch_quantization == "none":
+        return None
+    return qz.make_quantizer(
+        jax.random.fold_in(key, 0x51), m, cfg.sketch_quantization
+    )
+
+
+def make_engine(
+    w: jax.Array, cfg: CKMConfig, mesh=None, quantizer=None
+) -> SketchEngine:
+    """The SketchEngine for ``cfg`` — backend + quantization are config flags."""
     return SketchEngine(
-        w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh
+        w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh,
+        quantizer=quantizer,
     )
 
 
@@ -110,7 +139,8 @@ def compute_sketch(
     """
     x = jnp.asarray(x, jnp.float32)
     w, sigma2 = _draw_freqs(key, x, x.shape[1], cfg)
-    z, lo, hi = make_engine(w, cfg, mesh).sketch(x)
+    quantizer = make_quantizer(key, cfg, w.shape[1])
+    z, lo, hi = make_engine(w, cfg, mesh, quantizer).sketch(x)
     return z, w, sigma2, (lo, hi)
 
 
@@ -130,7 +160,8 @@ def compute_sketch_streaming(
     except StopIteration:
         raise ValueError("compute_sketch_streaming needs at least one batch")
     w, sigma2 = _draw_freqs(key, first, first.shape[1], cfg)
-    eng = make_engine(w, cfg, mesh)
+    quantizer = make_quantizer(key, cfg, w.shape[1])
+    eng = make_engine(w, cfg, mesh, quantizer)
     state = eng.update(eng.init_state(), first)
     for batch in it:
         state = eng.update(state, batch)

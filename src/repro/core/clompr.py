@@ -15,6 +15,16 @@ lsqnonneg.  For XLA we restructure the decoder into *fixed shapes*:
 Everything (the 2K outer iterations included) runs inside one ``jax.jit``; the
 decoder is ``vmap``-able over the PRNG key, which is how replicates are run in
 parallel (see ckm.py).
+
+Quantized sketches (QCKM).  The decoder consumes the *dequantized* sketch:
+when ``CKMConfig.sketch_quantization`` is on, the engine's ``finalize`` has
+already applied the E[sign] correction and dither rotation
+(``core.quantize.dequantize_sums``), so the ``z`` passed here satisfies the
+same ``z ~ A mu`` model with an extra additive noise floor (odd-harmonic
+leakage + O(1/sqrt(N)) code noise).  CLOMPR needs no modification — greedy
+residual pursuit is robust to this distortion (the QCKM result); only the
+absolute value of ``cost`` shifts by the noise floor, which cancels when
+comparing replicates of the same quantized sketch.  See ``docs/api.md``.
 """
 
 from __future__ import annotations

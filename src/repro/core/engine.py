@@ -41,6 +41,21 @@ sharded    ``shard_map`` over a device mesh: every device sketches its local
 
 All three backends produce identical sketches (within float tolerance) — the
 tier-1 suite asserts pairwise parity at 1e-4 on CPU.
+
+State transforms
+----------------
+Passing ``quantizer=`` (a ``core.quantize.SketchQuantizer``) swaps the state
+for its universally-quantized twin ``QuantizedSketchEngineState``: per-point
+contributions are quantized to 1-bit signs or ``b``-bit integer codes of the
+dithered phase, and the accumulators become **int32** sums — still a
+commutative monoid (integer addition), still exactly split-invariant (codes
+are deterministic per point), but 2-4x cheaper on the wire at minimal integer
+width when partials are merged across devices (the sharded backend psums the
+integer accumulators; the 32x factor applies to the raw per-sample codes).
+``finalize`` dequantizes via the known E[sign] correction and returns the same
+``(z, lower, upper)`` contract, so consumers — CLOMPR included — are unchanged.
+See ``docs/architecture.md`` for the full contract and ``core.quantize`` for
+the encoding/decoding math.
 """
 
 from __future__ import annotations
@@ -52,10 +67,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import quantize as qz
 from repro.core import sketch as sk
 from repro.utils import compat
 
-__all__ = ["SketchEngineState", "SketchEngine", "BACKENDS"]
+__all__ = [
+    "SketchEngineState",
+    "QuantizedSketchEngineState",
+    "SketchEngine",
+    "BACKENDS",
+]
 
 BACKENDS = ("xla", "pallas", "sharded")
 
@@ -71,8 +92,38 @@ class SketchEngineState(NamedTuple):
     count: jax.Array  # () f32 — number of points folded in
 
 
+class QuantizedSketchEngineState(NamedTuple):
+    """QCKM twin of :class:`SketchEngineState`: integer code accumulators.
+
+    Same monoid (identity = zeros, merge = elementwise add/min/max), but the
+    trig accumulators hold **int32 sums of universal-quantization codes** of
+    the dithered phases, so a partial state is 2-4x smaller at minimal
+    integer width and exactly split-invariant (codes deterministic per point).  Only unit
+    weights are representable — quantized states count points, not masses.
+    Capacity: int32 sums hold ``accumulator_capacity(bits)`` points before
+    wrapping (~2.1e9 at 1 bit); ``finalize`` checks the folded count.
+    """
+
+    qcos_acc: jax.Array  # (m,) i32 — sum_l Q(cos(w^T y_l + xi))
+    qsin_acc: jax.Array  # (m,) i32 — sum_l Q(sin(w^T y_l + xi))
+    weight_sum: jax.Array  # () f32 — == count (unit weights only)
+    lower: jax.Array  # (n,) f32 — running per-coordinate min
+    upper: jax.Array  # (n,) f32 — running per-coordinate max
+    count: jax.Array  # () f32 — number of points folded in
+
+
 @jax.jit
-def _merge_states(a: SketchEngineState, b: SketchEngineState) -> SketchEngineState:
+def _merge_states(a, b):
+    """Merge for either state flavour (dispatch happens at trace time)."""
+    if isinstance(a, QuantizedSketchEngineState):
+        return QuantizedSketchEngineState(
+            qcos_acc=a.qcos_acc + b.qcos_acc,
+            qsin_acc=a.qsin_acc + b.qsin_acc,
+            weight_sum=a.weight_sum + b.weight_sum,
+            lower=jnp.minimum(a.lower, b.lower),
+            upper=jnp.maximum(a.upper, b.upper),
+            count=a.count + b.count,
+        )
     return SketchEngineState(
         cos_acc=a.cos_acc + b.cos_acc,
         sin_acc=a.sin_acc + b.sin_acc,
@@ -90,6 +141,16 @@ def _finalize_state(state: SketchEngineState):
     return z, state.lower, state.upper
 
 
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _finalize_quantized(state: QuantizedSketchEngineState, dither, bits: int):
+    cos_acc, sin_acc = qz.dequantize_sums(
+        state.qcos_acc, state.qsin_acc, dither, bits
+    )
+    denom = jnp.maximum(state.weight_sum, 1e-30)
+    z = jnp.concatenate([cos_acc, -sin_acc]) / denom
+    return z, state.lower, state.upper
+
+
 class SketchEngine:
     """Streaming/mergeable sketch computation over pluggable backends.
 
@@ -102,6 +163,9 @@ class SketchEngine:
     interpret : force Pallas interpret mode (None = auto: interpret off-TPU).
     mesh, data_axes : device mesh + data axes (sharded backend only).  Batches
         passed to ``update`` must be shardable along their leading axis.
+    quantizer : optional ``core.quantize.SketchQuantizer`` — switches the
+        engine to the quantized state transform (int32 code accumulators,
+        unit weights only; see the module doc's "State transforms").
     """
 
     def __init__(
@@ -115,6 +179,7 @@ class SketchEngine:
         interpret: bool | None = None,
         mesh: Mesh | None = None,
         data_axes: Sequence[str] = ("data",),
+        quantizer: qz.SketchQuantizer | None = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -129,11 +194,26 @@ class SketchEngine:
         self.interpret = interpret
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
+        if quantizer is not None and quantizer.dither.shape != (self.m,):
+            raise ValueError(
+                f"quantizer dither shape {quantizer.dither.shape} != (m,)="
+                f"{(self.m,)}"
+            )
+        self.quantizer = quantizer
 
     # -- monoid ops ---------------------------------------------------------
 
-    def init_state(self) -> SketchEngineState:
+    def init_state(self) -> SketchEngineState | QuantizedSketchEngineState:
         """The monoid identity: merge(init_state(), s) == s for any s."""
+        if self.quantizer is not None:
+            return QuantizedSketchEngineState(
+                qcos_acc=jnp.zeros((self.m,), jnp.int32),
+                qsin_acc=jnp.zeros((self.m,), jnp.int32),
+                weight_sum=jnp.zeros((), jnp.float32),
+                lower=jnp.full((self.n,), jnp.inf, jnp.float32),
+                upper=jnp.full((self.n,), -jnp.inf, jnp.float32),
+                count=jnp.zeros((), jnp.float32),
+            )
         return SketchEngineState(
             cos_acc=jnp.zeros((self.m,), jnp.float32),
             sin_acc=jnp.zeros((self.m,), jnp.float32),
@@ -143,29 +223,56 @@ class SketchEngine:
             count=jnp.zeros((), jnp.float32),
         )
 
-    def update(
-        self,
-        state: SketchEngineState,
-        batch: jax.Array,
-        weights: jax.Array | None = None,
-    ) -> SketchEngineState:
+    def update(self, state, batch: jax.Array, weights: jax.Array | None = None):
         """Fold ``batch: (B, n)`` into ``state``.  ``weights`` default to 1
-        per point, so streaming batches of any size weight points equally."""
+        per point, so streaming batches of any size weight points equally.
+        The quantized state transform only represents unit weights (integer
+        code counts) and rejects explicit ``weights``."""
         x = jnp.asarray(batch, jnp.float32)
         b = x.shape[0]
-        if weights is None:
-            weights = jnp.ones((b,), jnp.float32)
+        if self.quantizer is not None:
+            if weights is not None:
+                raise ValueError(
+                    "quantized sketch states accumulate unit-weight integer "
+                    "counts; per-point weights are not representable"
+                )
+            part = self._quantized_batch_state(x)
         else:
-            weights = jnp.asarray(weights, jnp.float32)
-        part = self._batch_state(x, weights)
+            if weights is None:
+                weights = jnp.ones((b,), jnp.float32)
+            else:
+                weights = jnp.asarray(weights, jnp.float32)
+            part = self._batch_state(x, weights)
         return _merge_states(state, part)
 
-    def merge(self, a: SketchEngineState, b: SketchEngineState) -> SketchEngineState:
+    def merge(self, a, b):
         """Associative + commutative combine of two partial states."""
         return _merge_states(a, b)
 
-    def finalize(self, state: SketchEngineState):
-        """-> ``(z stacked-real (2m,), lower (n,), upper (n,))``."""
+    def finalize(self, state):
+        """-> ``(z stacked-real (2m,), lower (n,), upper (n,))``.
+
+        Quantized states are dequantized here (E[sign] correction + dither
+        rotation, ``core.quantize.dequantize_sums``) so every consumer sees
+        the same float-sketch contract regardless of the state transform.
+        """
+        if self.quantizer is not None:
+            # int32 code sums wrap silently once count * scale exceeds the
+            # int32 range — detect post-hoc from the (non-wrapping) f32 count
+            # rather than garbage-decode.  Skipped under tracing.
+            cap = qz.accumulator_capacity(self.quantizer.bits)
+            if not isinstance(state.count, jax.core.Tracer) and float(
+                state.count
+            ) > cap:
+                raise ValueError(
+                    f"quantized accumulators overflow: {float(state.count):.0f} "
+                    f"points folded at {self.quantizer.bits} bits exceeds the "
+                    f"int32 capacity of {cap} points "
+                    "(core.quantize.accumulator_capacity)"
+                )
+            return _finalize_quantized(
+                state, self.quantizer.dither, self.quantizer.bits
+            )
         return _finalize_state(state)
 
     # -- conveniences -------------------------------------------------------
@@ -209,6 +316,91 @@ class SketchEngine:
             lower=jnp.min(x, axis=0),
             upper=jnp.max(x, axis=0),
             count=jnp.asarray(x.shape[0], jnp.float32),
+        )
+
+    def _quantized_batch_state(self, x: jax.Array) -> QuantizedSketchEngineState:
+        q = self.quantizer
+        if self.backend == "sharded":
+            return self._sharded_quantized_batch_state(x)
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            qcos, qsin = ops.quantized_fourier_sketch_sums(
+                x,
+                self.w,
+                q.dither,
+                bits=q.bits,
+                block_n=self.block_n,
+                block_m=self.block_m,
+                interpret=self.interpret,
+            )
+        else:  # xla
+            qcos, qsin = sk.sketch_quantized(
+                x,
+                self.w,
+                q.dither,
+                bits=q.bits,
+                chunk=min(self.chunk, max(x.shape[0], 1)),
+            )
+        n_pts = jnp.asarray(x.shape[0], jnp.float32)
+        return QuantizedSketchEngineState(
+            qcos_acc=qcos,
+            qsin_acc=qsin,
+            weight_sum=n_pts,
+            lower=jnp.min(x, axis=0),
+            upper=jnp.max(x, axis=0),
+            count=n_pts,
+        )
+
+    def _sharded_quantized_batch_state(self, x: jax.Array) -> QuantizedSketchEngineState:
+        """Bandwidth-aware sharded path: psum **integer** accumulators.
+
+        Same ragged-batch strategy as the float path (pad with copies of the
+        first row, masked out), but the cross-device merge moves int32 code
+        sums instead of float sketches — the O(m) traffic the quantized
+        subsystem exists to shrink.
+        """
+        q = self.quantizer
+        axes = self.data_axes
+        chunk = self.chunk
+        b = x.shape[0]
+        extent = 1
+        for a in axes:
+            extent *= self.mesh.shape[a]
+        pad = (-b) % extent
+        valid = jnp.ones((b,), jnp.float32)
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (pad, x.shape[1]))], axis=0
+            )
+            valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.float32)], axis=0)
+
+        def local(x_shard, w_rep, dither_rep, valid_shard):
+            qcos, qsin = sk.sketch_quantized(
+                x_shard,
+                w_rep,
+                dither_rep,
+                valid=valid_shard,
+                bits=q.bits,
+                chunk=min(chunk, max(x_shard.shape[0], 1)),
+                vary_axes=axes,
+            )
+            qcos = jax.lax.psum(qcos, axes)
+            qsin = jax.lax.psum(qsin, axes)
+            cnt = jax.lax.psum(jnp.sum(valid_shard), axes)
+            lo = jax.lax.pmin(jnp.min(x_shard, axis=0), axes)
+            hi = jax.lax.pmax(jnp.max(x_shard, axis=0), axes)
+            return qcos, qsin, cnt, lo, hi
+
+        fn = compat.shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(axes), P(), P(), P(axes)),
+            out_specs=(P(), P(), P(), P(), P()),
+        )
+        qcos, qsin, cnt, lo, hi = fn(x, self.w, q.dither, valid)
+        return QuantizedSketchEngineState(
+            qcos, qsin, cnt, lo, hi, jnp.asarray(b, jnp.float32)
         )
 
     def _sharded_batch_state(self, x: jax.Array, weights: jax.Array) -> SketchEngineState:

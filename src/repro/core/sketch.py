@@ -26,6 +26,7 @@ from repro.utils import compat
 
 __all__ = [
     "sketch",
+    "sketch_quantized",
     "sketch_complex",
     "to_complex",
     "from_complex",
@@ -96,6 +97,55 @@ def sketch(
         acc0 = compat.pvary(acc0, vary_axes)
     (cos_acc, sin_acc), _ = jax.lax.scan(body, (acc0, acc0), (xs, ws_))
     return _stacked(cos_acc, sin_acc)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "chunk", "vary_axes"))
+def sketch_quantized(
+    x: jax.Array,
+    w: jax.Array,
+    dither: jax.Array,
+    valid: jax.Array | None = None,
+    bits: int = 1,
+    chunk: int = 8192,
+    vary_axes: tuple[str, ...] = (),
+) -> tuple[jax.Array, jax.Array]:
+    """Universally-quantized sketch sums (QCKM) — the XLA fallback path.
+
+    Returns int32 ``(q_cos_sum, q_sin_sum)`` of shape ``(m,)``: the per-point
+    codes ``quantize.quantize_codes(x @ w, dither, bits)`` summed over N.
+    Deterministic per point (the dither is per-frequency), hence exactly
+    split-invariant; chunked over N like :func:`sketch` so the ``(N, m)``
+    projection never materialises.  ``valid`` is a 0/1 row mask for padding
+    (masked rows contribute zero codes).  ``vary_axes``: see :func:`sketch`.
+    """
+    from repro.core import quantize as qz
+
+    x = jnp.asarray(x, jnp.float32)
+    n_pts = x.shape[0]
+    m = w.shape[1]
+    if valid is None:
+        valid = jnp.ones((n_pts,), jnp.float32)
+    else:
+        valid = jnp.asarray(valid, jnp.float32)
+
+    pad = (-n_pts) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)], axis=0)
+    n_chunks = x.shape[0] // chunk
+    xs = x.reshape(n_chunks, chunk, -1)
+    vs = valid.reshape(n_chunks, chunk)
+
+    def body(acc, inp):
+        xc, vc = inp
+        qc, qs = qz.quantize_codes(xc @ w, dither, bits, valid=vc[:, None])
+        return (acc[0] + jnp.sum(qc, axis=0), acc[1] + jnp.sum(qs, axis=0)), None
+
+    acc0 = jnp.zeros((m,), jnp.int32)
+    if vary_axes:
+        acc0 = compat.pvary(acc0, vary_axes)
+    (qcos, qsin), _ = jax.lax.scan(body, (acc0, acc0), (xs, vs))
+    return qcos, qsin
 
 
 def sketch_complex(

@@ -17,6 +17,13 @@ streams through it (Pallas revisiting semantics).
 TPU alignment: callers (ops.py) pad m to a multiple of the lane width (128),
 N to the block size, and the feature dim n to a multiple of 8; f32 tiles are
 (8, 128)-aligned.
+
+``quantized_fourier_sketch_kernel`` is the QCKM (core/quantize.py) variant of
+the same tiling: it adds the per-frequency dither to the projection tile,
+quantizes cos/sin to integer codes on the VPU, and accumulates **int32** sums
+— signs never leave VMEM unaccumulated, so the quantized encoder costs the
+same HBM traffic as the float one while its partial state shrinks to integer
+accumulators.
 """
 
 from __future__ import annotations
@@ -43,6 +50,79 @@ def _sketch_kernel(x_ref, w_ref, b_ref, cos_ref, sin_ref):
     # VPU: trig + weighted reduce over the batch tile, all in VMEM.
     cos_ref[...] += jnp.sum(jnp.cos(proj) * beta, axis=0, keepdims=True)
     sin_ref[...] += jnp.sum(jnp.sin(proj) * beta, axis=0, keepdims=True)
+
+
+def _quantized_sketch_kernel(x_ref, w_ref, d_ref, v_ref, qcos_ref, qsin_ref, *, scale):
+    """One (bN, bM) tile of the QCKM encoder: dithered phases -> int32 codes.
+
+    ``scale`` is static: 1 -> the 1-bit sign code; S > 1 -> round(S * cos/sin).
+    The whole tile stays in VMEM: MXU projection, VPU trig + rounding, and an
+    integer batch-reduction straight into the int32 output block.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        qcos_ref[...] = jnp.zeros_like(qcos_ref)
+        qsin_ref[...] = jnp.zeros_like(qsin_ref)
+
+    theta = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + d_ref[...]
+    )
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    if scale == 1:
+        qc = jnp.where(c >= 0, 1, -1)
+        qs = jnp.where(s >= 0, 1, -1)
+    else:
+        qc = jnp.round(c * float(scale)).astype(jnp.int32)
+        qs = jnp.round(s * float(scale)).astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)  # (bN, 1) 0/1 — zero out padding rows
+    qcos_ref[...] += jnp.sum(qc.astype(jnp.int32) * v, axis=0, keepdims=True)
+    qsin_ref[...] += jnp.sum(qs.astype(jnp.int32) * v, axis=0, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_n", "block_m", "interpret")
+)
+def quantized_fourier_sketch_kernel(
+    x: jax.Array,
+    w: jax.Array,
+    dither: jax.Array,
+    valid: jax.Array,
+    scale: int = 1,
+    block_n: int = 1024,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw QCKM kernel launch: inputs must be pre-padded/aligned (see ops.py).
+
+    x: (N, n) f32, w: (n, m) f32, dither: (1, m) f32, valid: (N, 1) f32
+    -> (q_cos_sums (1, m), q_sin_sums (1, m)) int32
+    """
+    n_pts, feat = x.shape
+    m = w.shape[1]
+    assert n_pts % block_n == 0 and m % block_m == 0, (n_pts, m)
+    grid = (m // block_m, n_pts // block_n)
+    return pl.pallas_call(
+        functools.partial(_quantized_sketch_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, feat), lambda i, j: (j, 0)),
+            pl.BlockSpec((feat, block_m), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, m), jnp.int32),
+            jax.ShapeDtypeStruct((1, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, w, dither, valid)
 
 
 @functools.partial(

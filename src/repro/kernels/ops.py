@@ -1,11 +1,20 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd public wrappers around the Pallas kernels (see ``docs/api.md``).
+
+Entry points
+------------
+- ``fourier_sketch_sums`` / ``fourier_sketch`` — fused float RFF sketch, the
+  ``pallas`` backend of ``core.engine.SketchEngine``;
+- ``quantized_fourier_sketch_sums`` — fused QCKM encoder: dithered phases ->
+  integer sign / b-bit codes accumulated in int32 (``core.quantize``);
+- ``flash_attention`` — fused attention forward for the serving path;
+- ``assign_argmin`` — fused nearest-centroid assignment.
 
 Handles padding/alignment (lane width 128, sublane 8, block divisibility) and
 backend dispatch: on TPU the compiled kernels run natively; on CPU (this
 container) they run in ``interpret=True`` mode, which executes the kernel body
 in Python for correctness validation.  Padded regions are constructed so they
-cannot perturb results (zero weights, +inf distances), and outputs are sliced
-back to logical shapes.
+cannot perturb results (zero weights / zero valid-masks, +inf distances), and
+outputs are sliced back to logical shapes.
 """
 
 from __future__ import annotations
@@ -67,6 +76,62 @@ def fourier_sketch_sums(
         x, w, beta, block_n=block_n, block_m=block_m, interpret=interpret
     )
     return cos_s[0, :m], sin_s[0, :m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "block_n", "block_m", "interpret")
+)
+def quantized_fourier_sketch_sums(
+    x: jax.Array,
+    w: jax.Array,
+    dither: jax.Array,
+    valid: jax.Array | None = None,
+    bits: int = 1,
+    block_n: int = 1024,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused QCKM encoder: int32 ``(q_cos_sums (m,), q_sin_sums (m,))``.
+
+    The quantized mergeable-state entrypoint used by ``core.engine`` (pallas
+    backend with a ``quantizer``): per point, quantize the dithered phase
+    ``w^T x + xi`` to a 1-bit sign (``bits=1``) or ``b``-bit uniform code and
+    accumulate integer sums — the XLA twin is ``core.sketch.sketch_quantized``.
+    Padding rows carry ``valid=0`` so they contribute zero codes.
+    """
+    from repro.core import quantize as qz
+    from repro.kernels import fourier_sketch as _qsk
+
+    if interpret is None:
+        interpret = _on_cpu()
+    n_pts = x.shape[0]
+    m = w.shape[1]
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    if valid is None:
+        valid = jnp.ones((n_pts,), jnp.float32)
+    valid = jnp.asarray(valid, jnp.float32).reshape(-1, 1)
+    dither = jnp.asarray(dither, jnp.float32).reshape(1, -1)
+
+    block_n = min(block_n, max(8, 1 << (n_pts - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))
+    # Pad: N to block (valid=0 rows contribute zero codes), n to sublane
+    # multiple (zero feature columns shift no phases), m to block (sliced off).
+    x = _pad_to(_pad_to(x, 0, block_n), 1, 8)
+    valid = _pad_to(valid, 0, block_n)
+    w = _pad_to(_pad_to(w, 0, 8), 1, block_m)
+    dither = _pad_to(dither, 1, block_m)
+    qcos, qsin = _qsk.quantized_fourier_sketch_kernel(
+        x,
+        w,
+        dither,
+        valid,
+        scale=qz.quantization_scale(bits),
+        block_n=block_n,
+        block_m=block_m,
+        interpret=interpret,
+    )
+    return qcos[0, :m], qsin[0, :m]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
