@@ -6,10 +6,13 @@ so wall-clock speedups are NOT meaningful; what we report per kernel is
 - the HBM-traffic model: bytes moved by the unfused jnp path (projection
   matrix materialised) vs the fused kernel (inputs+outputs only), which is
   the quantity the TPU roofline converts into time.
-Also times the jnp fallback paths (the actual CPU execution path), and
-reports the QCKM rows: dequantization error of the quantized sketch and the
+Also times the jnp fallback paths (the actual CPU execution path), reports
+the QCKM rows: dequantization error of the quantized sketch and the
 sketch bytes-on-the-wire per backend (float vs minimal-width integer
-accumulators) — the bandwidth the quantized subsystem saves at merge time.
+accumulators) — the bandwidth the quantized subsystem saves at merge time —
+and the decoder-comparison rows: SSE + decode wall-clock of every registered
+decoder on the fig-1 blobs protocol, from one shared sketch, so
+``kernels.json`` tracks per-decoder quality/latency across PRs.
 """
 
 from __future__ import annotations
@@ -19,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line, save, timed
+from repro.core import available_decoders
+from repro.core import ckm as ckm_mod
 from repro.core import engine as eng_mod
 from repro.core import quantize as qz
 from repro.core import sketch as core_sk
@@ -109,6 +114,48 @@ def run_quantized(results: dict, n_pts=8192, feat=16, m=1024):
     return results
 
 
+def run_decoders(results: dict, n_pts=8192, k=5, feat=4):
+    """Decoder-comparison rows (paper Fig. 1 blobs protocol at container
+    scale): every registered decoder decodes the SAME sketch; we record the
+    data-domain SSE, the sketch-domain cost, and the decode wall-clock (warm,
+    jitted — the real CPU execution path).  The smoke assertion pins the
+    tentpole acceptance: ``sketch_shift`` stays within 10% of CLOMPR's SSE.
+    """
+    key = jax.random.PRNGKey(11)
+    from repro.data import synthetic
+
+    x, _, _ = synthetic.gaussian_mixture(
+        key, n_pts, k=k, n=feat, c=6.0, return_labels=True
+    )
+    base = ckm_mod.CKMConfig(k=k)
+    z, w, _, (lo, hi) = ckm_mod.compute_sketch(jax.random.PRNGKey(1), x, base)
+    m = base.sketch_size(feat)
+    sses = {}
+    for name in available_decoders():
+        cfg = ckm_mod.CKMConfig(k=k, decoder=name)
+
+        def run_decode():
+            out = ckm_mod.decode_sketch(jax.random.PRNGKey(2), z, w, lo, hi, cfg)
+            return out
+
+        (cents, _, cost), _ = timed(run_decode)
+        (cents, _, cost), t = timed(run_decode)  # warm (jit cached)
+        sse_val = float(ckm_mod.sse(x, cents)) / n_pts
+        sses[name] = sse_val
+        results[f"decoder_{name}"] = {
+            "sse_per_n": sse_val,
+            "sketch_cost": float(cost),
+            "decode_seconds": t,
+        }
+        csv_line(
+            f"decoder_{name}_N{n_pts}_K{k}_m{m}", t, f"sse_per_n={sse_val:.4f}"
+        )
+    rel = sses["sketch_shift"] / sses["clompr"]
+    results["decoder_sketch_shift"]["sse_vs_clompr"] = rel
+    assert rel < 1.10, sses
+    return results
+
+
 def run(full: bool = False):
     results = {}
     shapes = [(4096, 16, 1024), (16384, 10, 1000)] if not full else [
@@ -166,6 +213,7 @@ def run(full: bool = False):
         assert agree == 1.0
     run_engine_backends(results)
     run_quantized(results)
+    run_decoders(results)
     save("kernels", results)
     return results
 

@@ -3,6 +3,7 @@ through the full distributed pipeline.
 
     PYTHONPATH=src python examples/full_pipeline.py [--n 1000000]
                                                     [--backend sharded|xla|pallas]
+                                                    [--decoder clompr|sketch_shift]
 
 Stages (all from the library, nothing bespoke):
 1. 8 placeholder devices, (4 data x 2 model) mesh;
@@ -10,9 +11,10 @@ Stages (all from the library, nothing bespoke):
    backend is a flag: "sharded" (shard_map + psum-merge over the data axis,
    O(m) cross-device traffic), "xla" (chunked scan) or "pallas" (fused
    kernel; interpret mode off-TPU);
-3. CLOMPR decodes K centroids from the sketch alone;
+3. a registered decoder ("clompr" or "sketch_shift", the --decoder flag)
+   decodes K centroids from the sketch alone;
 4. a second, *streaming* CKM fit consumes the same data as a chunked
-   iterator (ckm.fit_streaming) — out-of-core one-pass path;
+   iterator (fit_streaming) — out-of-core one-pass path;
 5. Lloyd-Max x5 runs on the gathered data as the reference;
 6. wall-clock + quality comparison (paper Fig. 4 protocol, container scale).
 """
@@ -27,8 +29,15 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import (
+    BACKENDS,
+    CKMConfig,
+    available_decoders,
+    decode_sketch,
+    fit_streaming,
+    sse,
+)
 from repro.core import ckm, lloyd
-from repro.core.engine import BACKENDS
 from repro.data import pipeline as pipe
 from repro.data import synthetic
 
@@ -39,6 +48,10 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--dim", type=int, default=10)
     ap.add_argument("--backend", choices=BACKENDS, default="sharded")
+    ap.add_argument("--decoder", choices=available_decoders(), default="clompr",
+                    help="sketch decoder (core.decoders registry): clompr = "
+                         "paper Algorithm 1; sketch_shift = mean shift on the "
+                         "sketched characteristic function")
     ap.add_argument("--stream-chunk", type=int, default=0,
                     help="also run the one-pass streaming fit at this chunk "
                          "size (0 = skip)")
@@ -53,9 +66,9 @@ def main():
         kd, args.n, args.k, args.dim, return_labels=True
     )
 
-    cfg = ckm.CKMConfig(
+    cfg = CKMConfig(
         k=args.k, sketch_backend=args.backend,
-        sketch_quantization=args.quantize,
+        sketch_quantization=args.quantize, decoder=args.decoder,
     )
     m = cfg.sketch_size(args.dim)
     from repro.core import frequencies as fq
@@ -85,22 +98,25 @@ def main():
     )
 
     t0 = time.perf_counter()
-    cents, alphas, cost = ckm.decode_sketch(kdec, z, freqs, lo, hi, cfg)
+    cents, alphas, cost = decode_sketch(kdec, z, freqs, lo, hi, cfg)
     jax.block_until_ready(cents)
     t_decode = time.perf_counter() - t0
-    sse_ckm = float(ckm.sse(x, cents)) / args.n
-    print(f"[2] CKM decode (sketch only): {t_decode:.2f}s  SSE/N={sse_ckm:.4f}")
+    sse_ckm = float(sse(x, cents)) / args.n
+    print(
+        f"[2] {args.decoder} decode (sketch only): {t_decode:.2f}s  "
+        f"SSE/N={sse_ckm:.4f}"
+    )
 
     if args.stream_chunk > 0:
         t0 = time.perf_counter()
-        res = ckm.fit_streaming(
+        res = fit_streaming(
             key, pipe.chunked(x, args.stream_chunk), cfg, mesh
         )
         jax.block_until_ready(res.centroids)
         t_stream = time.perf_counter() - t0
         print(
             f"[2b] streaming fit ({args.stream_chunk}-pt chunks): "
-            f"{t_stream:.2f}s  SSE/N={float(ckm.sse(x, res.centroids))/args.n:.4f}"
+            f"{t_stream:.2f}s  SSE/N={float(sse(x, res.centroids))/args.n:.4f}"
         )
 
     t0 = time.perf_counter()

@@ -1,3 +1,52 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public API of the compressive K-means core.
+
+The paper's pipeline is sketch -> decode; both halves are pluggable
+subsystems (``engine.SketchEngine`` backends/state transforms on the sketch
+side, the ``decoders`` registry on the decode side) behind one config:
+
+    from repro.core import CKMConfig, fit, sse, predict
+
+    res = fit(key, x, CKMConfig(k=10, decoder="sketch_shift"))
+
+Submodules (``repro.core.ckm``, ``.engine``, ``.quantize``, ...) remain
+importable for internals; examples and docs should use these exports.
+"""
+
+from repro.core.ckm import (
+    CKMConfig,
+    CKMResult,
+    compute_sketch,
+    compute_sketch_streaming,
+    decode_sketch,
+    fit,
+    fit_streaming,
+    predict,
+    sse,
+)
+from repro.core.decoders import (
+    DECODERS,
+    Decoder,
+    available_decoders,
+    get_decoder,
+    register_decoder,
+)
+from repro.core.engine import BACKENDS, SketchEngine
+
+__all__ = [
+    "CKMConfig",
+    "CKMResult",
+    "compute_sketch",
+    "compute_sketch_streaming",
+    "decode_sketch",
+    "fit",
+    "fit_streaming",
+    "predict",
+    "sse",
+    "DECODERS",
+    "Decoder",
+    "available_decoders",
+    "get_decoder",
+    "register_decoder",
+    "BACKENDS",
+    "SketchEngine",
+]

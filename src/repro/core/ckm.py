@@ -8,15 +8,21 @@ The pipeline is exactly the paper's four steps:
 3. compute the sketch ``z = Sk(X, 1/N)`` (one pass, through the unified
    ``core.engine.SketchEngine`` — xla / pallas / sharded backends; streaming
    via ``fit_streaming``) together with the box bounds ``l, u``,
-4. decode K centroids from the sketch with CLOMPR (``core.clompr``).
+4. decode K centroids from the sketch with a registered decoder
+   (``core.decoders``): ``CKMConfig.decoder`` selects ``"clompr"`` (paper
+   Algorithm 1, the default) or ``"sketch_shift"`` (mean-shift on the
+   sketched characteristic function — more robust modes from the same
+   sketch).
 
 Beyond the paper, ``CKMConfig.sketch_quantization`` switches step 3 to the
 QCKM universally-quantized sketch (``core.quantize``): per-point 1-bit/b-bit
-integer codes, dequantized via the E[sign] correction before step 4 — CLOMPR
-itself is unchanged (see ``docs/architecture.md``).
+integer codes, dequantized via the E[sign] correction before step 4 — the
+decoders are unchanged (see ``docs/architecture.md``).
 
-Replicates are ``vmap``-ed over PRNG keys and selected by the value of the
+Replicates are ``lax.map``-ed over PRNG keys and selected by the value of the
 sketch-domain cost (4) — the SSE is *not* available once data is discarded.
+Every registered decoder reports that same cost, so selection (and decoder
+comparison) is apples-to-apples.
 """
 
 from __future__ import annotations
@@ -28,10 +34,11 @@ from typing import Iterable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import decoders as dec_mod
 from repro.core import frequencies as freq_mod
 from repro.core import quantize as qz
 from repro.core import sketch as sk
-from repro.core.clompr import CLOMPRConfig, clompr
+from repro.core.decoders import CLOMPRConfig, SketchShiftConfig
 from repro.core.engine import SketchEngine
 
 
@@ -61,12 +68,45 @@ class CKMConfig:
     # Universal quantization of the sketch (QCKM): "none" | "1bit" | "<b>bit".
     # Per-point contributions are quantized to integer codes of the dithered
     # phase and accumulated in int32; finalize dequantizes via the E[sign]
-    # correction before CLOMPR decoding (see core.quantize).  Works on every
+    # correction before decoding (see core.quantize).  Works on every
     # backend; on "sharded" the cross-device merge psums integer accumulators.
     sketch_quantization: str = "none"
+    # Sketch decoder: any name in the registry (core.decoders) — "clompr"
+    # (paper Algorithm 1) or "sketch_shift" (mean-shift on the sketched
+    # characteristic function).  Replicate selection, quantized sketches and
+    # fit/fit_streaming work identically for every decoder.
+    decoder: str = "clompr"
+    # sketch_shift decoder knobs (ignored by "clompr"); nnls_iters and init
+    # above are shared by both decoders.  merge_radius_scale is clompr-only:
+    # the sketch_shift dedup radius is the (deliberately tighter)
+    # shift_dedup_scale below.
+    shift_candidates: int = 8  # mean-shift swarm size, per cluster (P = 8*K)
+    shift_steps: int = 150  # fixed-point iterations
+    shift_step_scale: float = 1.0  # multiplier on the natural step h^2
+    shift_polish_steps: int = 400  # joint (C, alpha) Adam after mode selection
+    shift_impl: str = "xla"  # score/shift step impl: "xla" | "pallas"
+    # Mode-harvest dedup radius, in units of 1/median||omega|| (one kernel
+    # std).  Deliberately tighter than merge_radius_scale: it only guards
+    # against re-picking leftover residue of an already-kept mode, and a
+    # larger radius would forbid genuinely overlapping clusters.
+    shift_dedup_scale: float = 1.0
 
     def sketch_size(self, n: int) -> int:
         return self.m if self.m is not None else 10 * self.k * n
+
+    def sketch_shift_config(self) -> SketchShiftConfig:
+        return SketchShiftConfig(
+            k=self.k,
+            candidates=max(self.shift_candidates * self.k, self.k),
+            shift_steps=self.shift_steps,
+            step_scale=self.shift_step_scale,
+            nnls_iters=self.nnls_iters,
+            polish_steps=self.shift_polish_steps,
+            polish_lr=self.joint_lr,
+            init=self.init,
+            dedup_radius_scale=self.shift_dedup_scale,
+            impl=self.shift_impl,
+        )
 
     def clompr_config(self) -> CLOMPRConfig:
         return CLOMPRConfig(
@@ -178,28 +218,29 @@ def decode_sketch(
     cfg: CKMConfig,
     x_init: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Step 4: CLOMPR decoding, with replicates selected by the cost (4).
+    """Step 4: decoding via the registered decoder ``cfg.decoder``, with
+    replicates selected by the cost (4).
 
     Replicate r uses ``fold_in(key, r)``, so the replicate-key sequence for
     R replicates is a prefix of the sequence for R' > R, and replicates run
     sequentially via ``lax.map`` (the *unbatched* decoder trace — identical
     numerics to a single run).  Together these make replicate selection
-    monotone: more replicates can never return a higher cost.
+    monotone for every decoder: more replicates can never return a higher
+    cost (all registry decoders report the same objective (4)).
     """
-    ccfg = cfg.clompr_config()
+    decode = dec_mod.get_decoder(cfg.decoder)
     keys = jnp.stack(
         [jax.random.fold_in(key, r) for r in range(cfg.replicates)]
     )
     if cfg.replicates == 1:
-        return clompr(keys[0], z, w, lower, upper, ccfg, x_init)
-    run = functools.partial(clompr, cfg=ccfg)
+        return decode(keys[0], z, w, lower, upper, cfg, x_init)
     if x_init is None:
         cents, alphas, costs = jax.lax.map(
-            lambda k_: run(k_, z, w, lower, upper), keys
+            lambda k_: decode(k_, z, w, lower, upper, cfg), keys
         )
     else:
         cents, alphas, costs = jax.lax.map(
-            lambda k_: run(k_, z, w, lower, upper, x_init=x_init), keys
+            lambda k_: decode(k_, z, w, lower, upper, cfg, x_init), keys
         )
     best = jnp.argmin(costs)
     return cents[best], alphas[best], costs[best]
@@ -265,12 +306,35 @@ def sse(x: jax.Array, centroids: jax.Array, chunk: int = 16384) -> jax.Array:
     return total
 
 
-@jax.jit
-def predict(x: jax.Array, centroids: jax.Array) -> jax.Array:
-    """Hard assignment of each point to its nearest centroid."""
-    d2 = (
-        jnp.sum(x * x, axis=1, keepdims=True)
-        - 2.0 * x @ centroids.T
-        + jnp.sum(centroids * centroids, axis=1)[None, :]
-    )
-    return jnp.argmin(d2, axis=1)
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def predict(
+    x: jax.Array, centroids: jax.Array, chunk: int = 16384
+) -> jax.Array:
+    """Hard assignment of each point to its nearest centroid (chunked over N).
+
+    Same pad+scan scheme as :func:`sse`: the ``(N, K)`` distance matrix never
+    materialises — only one ``(chunk, K)`` block lives at a time, so the
+    assignment pass works at the paper's N = 10^7 scale in O(chunk·K) memory.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n_pts = x.shape[0]
+    # N is a trace-time constant: shrink the chunk to it so small inputs
+    # (e.g. per-head KV caches on the serving path) don't pad up to 16384
+    # rows of wasted distance work.  jit retraces per shape anyway.
+    chunk = min(chunk, max(n_pts, 1))
+    pad = (-n_pts) % chunk
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    xs = x.reshape(-1, chunk, x.shape[1])
+    c2 = jnp.sum(centroids * centroids, axis=1)  # (K,)
+
+    def body(_, xc):
+        d2 = (
+            jnp.sum(xc * xc, axis=1, keepdims=True)
+            - 2.0 * xc @ centroids.T
+            + c2[None, :]
+        )
+        return None, jnp.argmin(d2, axis=1)
+
+    _, labels = jax.lax.scan(body, None, xs)
+    return labels.reshape(-1)[:n_pts]

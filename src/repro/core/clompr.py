@@ -1,283 +1,13 @@
-"""CLOMPR for K-means (paper Algorithm 1) — a jit-end-to-end JAX decoder.
+"""Back-compat adapter: CLOMPR now lives in the decoder subsystem.
 
-The Matlab original grows the support ``C`` dynamically and calls fminunc /
-lsqnonneg.  For XLA we restructure the decoder into *fixed shapes*:
-
-- the support lives in a padded ``(K+1, n)`` buffer + boolean mask (the support
-  never exceeds K+1: it grows by one per iteration and is hard-thresholded back
-  to K once ``t > K``),
-- gradient ascent/descent (steps 1 and 5) are projected Adam with a fixed step
-  count, run in *unit-box coordinates* ``c = l + s (u - l)`` so learning rates
-  are scale-free and the paper's box constraint is a clip,
-- NNLS (steps 3/4) is FISTA with a fixed iteration budget (see nnls.py),
-- hard thresholding is ``top_k`` + a compacting gather.
-
-Everything (the 2K outer iterations included) runs inside one ``jax.jit``; the
-decoder is ``vmap``-able over the PRNG key, which is how replicates are run in
-parallel (see ckm.py).
-
-Quantized sketches (QCKM).  The decoder consumes the *dequantized* sketch:
-when ``CKMConfig.sketch_quantization`` is on, the engine's ``finalize`` has
-already applied the E[sign] correction and dither rotation
-(``core.quantize.dequantize_sums``), so the ``z`` passed here satisfies the
-same ``z ~ A mu`` model with an extra additive noise floor (odd-harmonic
-leakage + O(1/sqrt(N)) code noise).  CLOMPR needs no modification — greedy
-residual pursuit is robust to this distortion (the QCKM result); only the
-absolute value of ``cost`` shifts by the noise floor, which cancels when
-comparing replicates of the same quantized sketch.  See ``docs/api.md``.
+The implementation moved verbatim to ``repro.core.decoders.clompr`` (the
+``"clompr"`` entry of the decoder registry); this module re-exports it so
+existing imports — ``from repro.core.clompr import CLOMPRConfig, clompr`` —
+keep working with bitwise-identical numerics.  New code should go through the
+registry (``repro.core.decoders.get_decoder``) or the ``CKMConfig.decoder``
+flag; see ``docs/architecture.md``.
 """
 
-from __future__ import annotations
+from repro.core.decoders.clompr import CLOMPRConfig, InitStrategy, clompr
 
-import dataclasses
-import functools
-from typing import Literal
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import nnls as nnls_mod
-from repro.core import sketch as sk
-
-InitStrategy = Literal["range", "sample", "kpp"]
-
-
-@dataclasses.dataclass(frozen=True)
-class CLOMPRConfig:
-    """Static hyper-parameters of the decoder (hashable -> jit static arg)."""
-
-    k: int
-    atom_steps: int = 300  # step-1 gradient ascent iterations
-    joint_steps: int = 200  # step-5 joint gradient descent iterations
-    nnls_iters: int = 150
-    atom_lr: float = 0.05  # Adam lr in unit-box coordinates
-    joint_lr: float = 0.02
-    init: InitStrategy = "range"
-    # Step-1 ascent restarts: best of R random inits (cheap, vectorised).
-    atom_restarts: int = 1
-    # Extra step-5 iterations run once after the 2K outer loop: the Matlab
-    # reference runs its minimisations to convergence; a final long polish
-    # recovers that quality at fixed cost.
-    final_steps: int = 1000
-    # Beyond-paper: before hard thresholding, atoms closer than
-    # ``merge_radius_scale / median||omega||`` (the sketch's resolution) to a
-    # higher-beta atom are suppressed.  With IMBALANCED mixtures, two atoms
-    # splitting a heavy cluster each out-weigh a light cluster's single atom
-    # and the paper's top-K would drop the light cluster; within-resolution
-    # duplicates carry no information, so suppressing them is safe.  0 = off
-    # (paper-faithful behaviour).  The default 2.5/median||omega|| ~ 2 cluster
-    # stds under the adapted-radius scale heuristic: split atoms straddling
-    # one Gaussian sit ~2 stds apart, while paper-regime clusters are >=4-6
-    # stds apart.
-    merge_radius_scale: float = 2.5
-
-
-# ---------------------------------------------------------------------------
-# Projected Adam (fixed step count, pytree params, box projection via callback)
-# ---------------------------------------------------------------------------
-
-
-def _adam(loss_fn, params, steps: int, lr: float, project):
-    """Minimise ``loss_fn`` over pytree ``params`` with projected Adam."""
-    b1, b2, eps = 0.9, 0.999, 1e-8
-    zeros = jax.tree.map(jnp.zeros_like, params)
-
-    def body(carry, i):
-        p, m, v = carry
-        _, g = jax.value_and_grad(loss_fn)(p)
-        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
-        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
-        t = i + 1
-        mhat_scale = 1.0 / (1.0 - b1**t)
-        vhat_scale = 1.0 / (1.0 - b2**t)
-        p = jax.tree.map(
-            lambda p_, m_, v_: p_
-            - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
-            p,
-            m,
-            v,
-        )
-        p = project(p)
-        return (p, m, v), None
-
-    (params, _, _), _ = jax.lax.scan(
-        body, (params, zeros, zeros), jnp.arange(1, steps + 1, dtype=jnp.float32)
-    )
-    return params
-
-
-# ---------------------------------------------------------------------------
-# Step 1 — find a new centroid: maximise Re< A d_c / ||.||, r > over the box
-# ---------------------------------------------------------------------------
-
-
-def _init_s0(key, t, s_buf, mask, x_unit, cfg: CLOMPRConfig, shape):
-    """Initial point(s) for the step-1 ascent, in unit-box coordinates."""
-    if cfg.init == "range" or x_unit is None:
-        return jax.random.uniform(key, shape)
-    if cfg.init == "sample":
-        idx = jax.random.randint(key, (shape[0],), 0, x_unit.shape[0])
-        return x_unit[idx]
-    # "kpp": D^2 sampling against the *current* support (k-means++ style; the
-    # paper's wording says "inversely proportional to distance" but k-means++
-    # [9] — which it cites as the analog — samples prop. to squared distance).
-    d2 = jnp.sum((x_unit[:, None, :] - s_buf[None, :, :]) ** 2, axis=-1)  # (N, K+1)
-    d2 = jnp.where(mask[None, :], d2, jnp.inf)
-    dmin = jnp.min(d2, axis=1)
-    dmin = jnp.where(jnp.isfinite(dmin), dmin, 1.0)  # t=0: uniform
-    idx = jax.random.categorical(
-        key, jnp.log(jnp.maximum(dmin, 1e-20))[None, :].repeat(shape[0], 0)
-    )
-    return x_unit[idx]
-
-
-def _find_atom(key, r, w, lo, span, s_buf, mask, t, x_unit, cfg: CLOMPRConfig):
-    """Gradient-ascend the normalised correlation; best of ``atom_restarts``."""
-    m = w.shape[1]
-    inv_norm = 1.0 / jnp.sqrt(jnp.asarray(m, jnp.float32))
-
-    def neg_corr(s):  # s: (R, n) -> scalar (summed; restarts are independent)
-        c = lo + s * span
-        a = sk.atoms(c, w)  # (R, 2m)
-        return -jnp.sum((a @ r) * inv_norm)
-
-    shape = (cfg.atom_restarts, w.shape[0])
-    s0 = _init_s0(key, t, s_buf, mask, x_unit, cfg, shape)
-    s_opt = _adam(
-        neg_corr, s0, cfg.atom_steps, cfg.atom_lr, lambda p: jnp.clip(p, 0.0, 1.0)
-    )
-    corr = sk.atoms(lo + s_opt * span, w) @ r  # (R,)
-    best = jnp.argmax(corr)
-    return s_opt[best]
-
-
-# ---------------------------------------------------------------------------
-# The decoder
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def clompr(
-    key: jax.Array,
-    z: jax.Array,
-    w: jax.Array,
-    lower: jax.Array,
-    upper: jax.Array,
-    cfg: CLOMPRConfig,
-    x_init: jax.Array | None = None,
-):
-    """Decode K weighted Diracs from the sketch ``z`` (stacked-real, (2m,)).
-
-    Returns ``(centroids (K, n), weights (K,), cost)`` where ``cost`` is the
-    final value of the paper's objective (4), used to select among replicates.
-    ``x_init`` is only consulted by the non-compressive "sample"/"kpp" init
-    strategies (paper §4.2).
-    """
-    n = w.shape[0]
-    m = w.shape[1]
-    kp1 = cfg.k + 1
-    lo = jnp.asarray(lower, jnp.float32)
-    hi = jnp.asarray(upper, jnp.float32)
-    span = jnp.maximum(hi - lo, 1e-12)
-    x_unit = None if x_init is None else (jnp.asarray(x_init, jnp.float32) - lo) / span
-    inv_norm = 1.0 / jnp.sqrt(jnp.asarray(m, jnp.float32))
-
-    def model(s_buf, alpha, mask):
-        """Masked sketch of the current mixture: sum_k alpha_k A delta_{c_k}."""
-        a = sk.atoms(lo + s_buf * span, w)  # (K+1, 2m)
-        maskf = mask.astype(jnp.float32)
-        return (alpha * maskf) @ a
-
-    def outer(t, carry):
-        s_buf, alpha, mask, r, key = carry
-        key, k1 = jax.random.split(key)
-
-        # -- Step 1+2: find a new centroid, expand support into the free slot.
-        s_new = _find_atom(k1, r, w, lo, span, s_buf, mask, t, x_unit, cfg)
-        count = jnp.sum(mask.astype(jnp.int32))
-        s_buf = s_buf.at[count].set(s_new)  # count <= K: one slot always free
-        mask = mask.at[count].set(True)
-
-        # -- Step 3: hard thresholding once t >= K (support is then K+1).
-        def threshold(args):
-            s_buf, mask = args
-            a_n = sk.atoms(lo + s_buf * span, w) * inv_norm  # normalised atoms
-            beta = nnls_mod.nnls(a_n.T, z, mask, iters=cfg.nnls_iters)
-            score = jnp.where(mask, beta, -jnp.inf)
-            if cfg.merge_radius_scale > 0:
-                # Suppress within-resolution duplicates of higher-beta atoms.
-                cents = lo + s_buf * span
-                d2 = jnp.sum((cents[:, None] - cents[None]) ** 2, axis=-1)
-                radius = cfg.merge_radius_scale / jnp.median(
-                    jnp.linalg.norm(w, axis=0)
-                )
-                higher = (beta[None, :] > beta[:, None]) | (
-                    (beta[None, :] == beta[:, None])
-                    & (jnp.arange(kp1)[None, :] < jnp.arange(kp1)[:, None])
-                )
-                close = d2 < radius * radius
-                absorbed = jnp.any(close & higher & mask[None, :], axis=1)
-                score = jnp.where(absorbed, -jnp.inf, score)
-            order = jnp.argsort(-score, stable=True)  # top-K first
-            s_buf = s_buf[order]
-            new_mask = jnp.arange(kp1) < cfg.k
-            return s_buf, new_mask
-
-        s_buf, mask = jax.lax.cond(
-            t >= cfg.k, threshold, lambda args: args, (s_buf, mask)
-        )
-
-        # -- Step 4: NNLS projection for alpha on the (unnormalised) atoms.
-        a = sk.atoms(lo + s_buf * span, w)
-        alpha = nnls_mod.nnls(a.T, z, mask, iters=cfg.nnls_iters)
-
-        # -- Step 5: joint gradient descent on (C, alpha), box + nonneg proj.
-        def joint_loss(p):
-            s_, al_ = p
-            res = z - model(s_, al_, mask)
-            return jnp.sum(res * res)
-
-        def joint_project(p):
-            s_, al_ = p
-            return jnp.clip(s_, 0.0, 1.0), jnp.maximum(al_, 0.0)
-
-        s_buf, alpha = _adam(
-            joint_loss, (s_buf, alpha), cfg.joint_steps, cfg.joint_lr, joint_project
-        )
-
-        # -- Residual update.
-        r = z - model(s_buf, alpha, mask)
-        return s_buf, alpha, mask, r, key
-
-    s_buf0 = jnp.zeros((kp1, n), jnp.float32)
-    alpha0 = jnp.zeros((kp1,), jnp.float32)
-    mask0 = jnp.zeros((kp1,), bool)
-    carry = (s_buf0, alpha0, mask0, z, key)
-    s_buf, alpha, mask, r, _ = jax.lax.fori_loop(0, 2 * cfg.k, outer, carry)
-
-    # Final polish: one long joint descent (Matlab runs step 5 to convergence).
-    if cfg.final_steps > 0:
-
-        def joint_loss(p):
-            s_, al_ = p
-            a = sk.atoms(lo + s_ * span, w)
-            res = z - (al_ * mask.astype(jnp.float32)) @ a
-            return jnp.sum(res * res)
-
-        s_buf, alpha = _adam(
-            joint_loss,
-            (s_buf, alpha),
-            cfg.final_steps,
-            cfg.joint_lr,
-            lambda p: (jnp.clip(p[0], 0.0, 1.0), jnp.maximum(p[1], 0.0)),
-        )
-        a = sk.atoms(lo + s_buf * span, w)
-        r = z - (alpha * mask.astype(jnp.float32)) @ a
-
-    # Compact the K active slots to the front (exactly K are active at exit).
-    order = jnp.argsort(~mask, stable=True)
-    centroids = (lo + s_buf * span)[order][: cfg.k]
-    weights = jnp.where(mask, alpha, 0.0)[order][: cfg.k]
-    wsum = jnp.maximum(jnp.sum(weights), 1e-20)
-    cost = jnp.sum(r * r)
-    return centroids, weights / wsum, cost
+__all__ = ["CLOMPRConfig", "InitStrategy", "clompr"]

@@ -1,0 +1,34 @@
+"""Pluggable sketch decoders — the decode half of sketch -> decode.
+
+Mirrors the engine subsystem on the other side of the pipeline: a ``Decoder``
+protocol + registry (``registry.py``), with two built-ins registered on
+import — ``"clompr"`` (paper Algorithm 1, numerics bitwise-identical to the
+pre-registry ``core.clompr``) and ``"sketch_shift"`` (mean-shift on the
+sketched characteristic function).  Select end-to-end with
+``CKMConfig(decoder=...)``; see the Decoders section of
+``docs/architecture.md`` for the contract and when to pick which.
+"""
+
+from repro.core.decoders.registry import (
+    DECODERS,
+    Decoder,
+    available_decoders,
+    get_decoder,
+    register_decoder,
+)
+
+# Importing the built-in decoder modules registers them.
+from repro.core.decoders.clompr import CLOMPRConfig, clompr
+from repro.core.decoders.sketch_shift import SketchShiftConfig, sketch_shift
+
+__all__ = [
+    "DECODERS",
+    "Decoder",
+    "available_decoders",
+    "get_decoder",
+    "register_decoder",
+    "CLOMPRConfig",
+    "clompr",
+    "SketchShiftConfig",
+    "sketch_shift",
+]

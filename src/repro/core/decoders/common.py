@@ -1,0 +1,59 @@
+"""Shared decoder machinery: projected Adam + the sketch-domain objective.
+
+Both built-in decoders optimise inside one ``jit`` with fixed shapes, so they
+share the same fixed-step projected-Adam loop (moved verbatim from the
+original ``core.clompr`` — CLOMPR's numerics are bitwise-unchanged by the
+refactor) and report the same cost ``||z - A(C) alpha||^2`` for replicate
+selection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+
+
+def adam(loss_fn, params, steps: int, lr: float, project):
+    """Minimise ``loss_fn`` over pytree ``params`` with projected Adam."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    zeros = jax.tree.map(jnp.zeros_like, params)
+
+    def body(carry, i):
+        p, m, v = carry
+        _, g = jax.value_and_grad(loss_fn)(p)
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+        t = i + 1
+        mhat_scale = 1.0 / (1.0 - b1**t)
+        vhat_scale = 1.0 / (1.0 - b2**t)
+        p = jax.tree.map(
+            lambda p_, m_, v_: p_
+            - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+            p,
+            m,
+            v,
+        )
+        p = project(p)
+        return (p, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(
+        body, (params, zeros, zeros), jnp.arange(1, steps + 1, dtype=jnp.float32)
+    )
+    return params
+
+
+def residual_cost(z: jax.Array, centroids: jax.Array, alpha: jax.Array, w: jax.Array) -> jax.Array:
+    """The shared selection objective: ``||z - sum_k alpha_k A delta_{c_k}||^2``."""
+    r = z - alpha @ sk.atoms(centroids, w)
+    return jnp.sum(r * r)
+
+
+def resolution_radius(w: jax.Array, scale: float) -> jax.Array:
+    """The sketch's spatial resolution: ``scale / median ||omega_j||``.
+
+    Centroids closer than this are indistinguishable at the sampled
+    frequencies — used by both decoders to suppress duplicate atoms/modes.
+    """
+    return scale / jnp.median(jnp.linalg.norm(w, axis=0))

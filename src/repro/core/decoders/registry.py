@@ -1,0 +1,85 @@
+"""The decoder registry — the sketch-to-centroids half of the pipeline.
+
+The paper's pipeline is *sketch -> decode*.  The sketch half is a pluggable
+subsystem (``core.engine.SketchEngine``: backends + state transforms); this
+package mirrors that architecture on the decode half.  A **decoder** turns a
+finalized sketch into centroids:
+
+    decode(key, z, w, lower, upper, cfg, x_init=None)
+        -> (centroids (K, n), alphas (K,), cost scalar)
+
+where ``z`` is the stacked-real ``(2m,)`` sketch, ``w: (n, m)`` the frequency
+matrix, ``(lower, upper)`` the box bounds harvested by the engine, ``cfg`` the
+pipeline config (a ``ckm.CKMConfig``-shaped object — each decoder extracts its
+own static sub-config from it), and ``x_init`` an optional data sample for the
+non-compressive init strategies.  ``cost`` is the sketch-domain objective
+``||z - A(C) alpha||^2`` — every decoder reports the *same* objective so
+replicate selection (and decoder comparison) is apples-to-apples.
+
+Contract: a decoder must be a pure jit-able function of its array arguments
+(``cfg`` static), and ``lax.map``-able over PRNG keys — that is how
+``ckm.decode_sketch`` runs best-of-R replicates.
+
+Registering a decoder::
+
+    @register_decoder("my_decoder")
+    def my_decoder(key, z, w, lower, upper, cfg, x_init=None):
+        ...
+
+Built-ins: ``"clompr"`` (the paper's Algorithm 1, moved here unchanged) and
+``"sketch_shift"`` (mean-shift iterations on the sketched characteristic
+function, Belhadji & Gribonval 2023).  Selection is a config flag:
+``CKMConfig(decoder="sketch_shift")``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import jax
+
+
+class Decoder(Protocol):
+    """A sketch decoder: ``(key, z, w, lower, upper, cfg[, x_init])`` ->
+    ``(centroids, alphas, cost)``."""
+
+    def __call__(
+        self,
+        key: jax.Array,
+        z: jax.Array,
+        w: jax.Array,
+        lower: jax.Array,
+        upper: jax.Array,
+        cfg,
+        x_init: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]: ...
+
+
+DECODERS: dict[str, Decoder] = {}
+
+
+def register_decoder(name: str) -> Callable[[Decoder], Decoder]:
+    """Decorator: register ``fn`` under ``name`` (unique, lowercase)."""
+
+    def deco(fn: Decoder) -> Decoder:
+        if name in DECODERS:
+            raise ValueError(f"decoder {name!r} already registered")
+        DECODERS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_decoder(name: str) -> Decoder:
+    """Look up a registered decoder; raises with the available names."""
+    try:
+        return DECODERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown decoder {name!r}; available: {sorted(DECODERS)}"
+        ) from None
+
+
+def available_decoders() -> list[str]:
+    """Sorted names of all registered decoders."""
+    return sorted(DECODERS)

@@ -6,6 +6,10 @@ Entry points
   ``pallas`` backend of ``core.engine.SketchEngine``;
 - ``quantized_fourier_sketch_sums`` — fused QCKM encoder: dithered phases ->
   integer sign / b-bit codes accumulated in int32 (``core.quantize``);
+- ``sketch_shift_scores`` — density + gradient of the sketched characteristic
+  function, the inner score/shift step of the ``sketch_shift`` decoder
+  (``core.decoders.sketch_shift``); ``impl="xla" | "pallas"`` mirrors the
+  sketch side's backend treatment;
 - ``flash_attention`` — fused attention forward for the serving path;
 - ``assign_argmin`` — fused nearest-centroid assignment.
 
@@ -154,6 +158,68 @@ def fourier_sketch(
         x, w, beta, block_n=block_n, block_m=block_m, interpret=interpret
     )
     return jnp.concatenate([cos_s, -sin_s])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "block_p", "block_m", "interpret")
+)
+def sketch_shift_scores(
+    c: jax.Array,
+    w: jax.Array,
+    z: jax.Array,
+    impl: str = "xla",
+    block_p: int = 256,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sketched-density score + gradient at candidate centroids ``c: (P, n)``.
+
+    The inner step of the sketch-and-shift decoder: for the stacked-real
+    sketch ``z = [z1, z2]`` (``(2m,)``) and frequencies ``w: (n, m)`` returns
+
+        f(c)  = (1/m) Σ_j [cos(w_j·c) z1_j - sin(w_j·c) z2_j]     -> (P,)
+        ∇f(c) = (1/m) Σ_j w_j [-sin(w_j·c) z1_j - cos(w_j·c) z2_j] -> (P, n)
+
+    which is a kernel-density surrogate of the data distribution (``f(c) =
+    Σ_l β_l κ(c - x_l)`` with κ the frequency distribution's characteristic
+    kernel) — mean-shift iterations ascend it.  ``impl`` selects the same two
+    treatments the sketch side gets: ``"xla"`` (plain fused jnp, runs
+    anywhere — the default) or ``"pallas"`` (the fused VMEM-resident TPU
+    kernel ``kernels.sketch_shift``; interpret mode off-TPU).
+    """
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown sketch_shift impl {impl!r}")
+    c = jnp.asarray(c, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    z = jnp.asarray(z, jnp.float32)
+    m = w.shape[1]
+    z1, z2 = z[:m], z[m:]
+    if impl == "xla":
+        proj = c @ w  # (P, m)
+        cosp, sinp = jnp.cos(proj), jnp.sin(proj)
+        f = (cosp @ z1 - sinp @ z2) / m
+        g = ((-sinp) * z1[None, :] - cosp * z2[None, :]) @ w.T / m
+        return f, g
+    if interpret is None:
+        interpret = _on_cpu()
+    from repro.kernels import sketch_shift as _shift
+
+    p_cand, feat = c.shape
+    block_p = min(block_p, max(8, 1 << (p_cand - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))
+    # Pad: P to block (garbage rows sliced off), n to sublane multiple (zero
+    # feature columns shift no phases and add zero gradient columns), m to
+    # block with zero frequency columns AND zero sketch entries (cos(0)*0
+    # contributes nothing to f; zero w columns contribute nothing to grad).
+    c_p = _pad_to(_pad_to(c, 0, block_p), 1, 8)
+    w_p = _pad_to(_pad_to(w, 0, 8), 1, block_m)
+    z1_p = _pad_to(z1.reshape(1, -1), 1, block_m)
+    z2_p = _pad_to(z2.reshape(1, -1), 1, block_m)
+    f_sums, g_sums = _shift.sketch_shift_kernel(
+        c_p, w_p, z1_p, z2_p, block_p=block_p, block_m=block_m,
+        interpret=interpret,
+    )
+    return f_sums[:p_cand, 0] / m, g_sums[:p_cand, :feat] / m
 
 
 @functools.partial(

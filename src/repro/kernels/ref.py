@@ -40,6 +40,25 @@ def flash_attention_ref(
     return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)
 
 
+def sketch_shift_scores_ref(
+    c: jax.Array, w: jax.Array, z: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(density (P,), gradient (P, n)) of the sketched-density surrogate.
+
+    Independent complex-arithmetic formulation (the kernel works in stacked
+    reals): with ``Sk_j = z1_j + i z2_j`` the surrogate is
+    ``f(c) = (1/m) sum_j Re(e^{i w_j^T c} Sk_j)`` and
+    ``grad f(c) = -(1/m) sum_j w_j Im(e^{i w_j^T c} Sk_j)``.
+    """
+    m = w.shape[1]
+    skc = jax.lax.complex(z[:m].astype(jnp.float32), z[m:].astype(jnp.float32))
+    e = jnp.exp(1j * (c.astype(jnp.float32) @ w.astype(jnp.float32)))  # (P, m)
+    val = e * skc[None, :]
+    f = jnp.mean(jnp.real(val), axis=1)
+    g = -(jnp.imag(val) @ w.T) / m
+    return f, g
+
+
 def assign_argmin_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(assignment (N,) i32, min squared distance (N,) f32) — full matrix."""
     x = x.astype(jnp.float32)

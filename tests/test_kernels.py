@@ -109,6 +109,59 @@ class TestAssignArgminKernel:
         np.testing.assert_array_equal(np.asarray(idx), np.zeros(16, np.int32))
 
 
+class TestSketchShiftKernel:
+    def _problem(self, seed, p_cand, feat, m):
+        key = jax.random.PRNGKey(seed)
+        kc, kw, kz = jax.random.split(key, 3)
+        c = jax.random.normal(kc, (p_cand, feat)) * 2.0
+        w = jax.random.normal(kw, (feat, m)) * 0.7
+        z = jax.random.normal(kz, (2 * m,)) * 0.3
+        return c, w, z
+
+    @pytest.mark.parametrize(
+        "p_cand,feat,m",
+        [
+            (8, 8, 128),  # exactly aligned
+            (37, 5, 300),  # ragged everywhere
+            (1, 2, 7),  # degenerate small
+            (40, 4, 200),  # the decoder's default swarm shape
+        ],
+    )
+    def test_pallas_matches_ref(self, p_cand, feat, m):
+        c, w, z = self._problem(0, p_cand, feat, m)
+        f, g = ops.sketch_shift_scores(
+            c, w, z, impl="pallas", block_p=8, block_m=128, interpret=True
+        )
+        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w, z)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+    def test_xla_matches_ref(self):
+        """The decoder's default impl vs the complex-arithmetic oracle."""
+        c, w, z = self._problem(1, 25, 6, 250)
+        f, g = ops.sketch_shift_scores(c, w, z, impl="xla")
+        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w, z)
+        np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+    def test_gradient_is_density_gradient(self):
+        """g must be the autodiff gradient of f (the op returns both fused)."""
+        c, w, z = self._problem(2, 6, 4, 96)
+
+        def f_single(ci):
+            f, _ = ops.sketch_shift_scores(ci[None, :], w, z, impl="xla")
+            return f[0]
+
+        g_auto = jax.vmap(jax.grad(f_single))(c)
+        _, g = ops.sketch_shift_scores(c, w, z, impl="xla")
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto), atol=1e-5)
+
+    def test_unknown_impl_raises(self):
+        c, w, z = self._problem(3, 4, 3, 64)
+        with pytest.raises(ValueError, match="impl"):
+            ops.sketch_shift_scores(c, w, z, impl="cuda")
+
+
 class TestFlashAttentionKernel:
     @pytest.mark.parametrize(
         "b,s,h,kv,hd,causal,window",
