@@ -4,6 +4,8 @@ through the full distributed pipeline.
     PYTHONPATH=src python examples/full_pipeline.py [--n 1000000]
                                                     [--backend sharded|xla|pallas]
                                                     [--decoder clompr|sketch_shift]
+                                                    [--topology allreduce|tree|ring]
+                                                    [--ingest sync|async]
 
 Stages (all from the library, nothing bespoke):
 1. 8 placeholder devices, (4 data x 2 model) mesh;
@@ -37,9 +39,10 @@ from repro.core import (
     fit_streaming,
     sse,
 )
-from repro.core import ckm, lloyd
+from repro.core import available_topologies, ckm, lloyd
 from repro.data import pipeline as pipe
 from repro.data import synthetic
+from repro.launch.specs import SketchJobSpec
 
 
 def main():
@@ -58,7 +61,22 @@ def main():
     ap.add_argument("--quantize", default="none",
                     help="universal sketch quantization (QCKM): none | 1bit "
                          "| <b>bit — integer accumulators, cheaper merges")
+    ap.add_argument("--topology", choices=available_topologies(),
+                    default="allreduce",
+                    help="cross-device merge schedule of the sharded backend "
+                         "(core.topology registry); same sketch either way, "
+                         "different wire cost — see docs/scaling.md")
+    ap.add_argument("--ingest", choices=("sync", "async"), default="sync",
+                    help="streaming-fit ingest mode: async overlaps batch "
+                         "production with sketch compute (core.ingest)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="async ingest queue depth (2 = double buffering)")
     args = ap.parse_args()
+    job = SketchJobSpec(
+        backend=args.backend, reduce_topology=args.topology,
+        ingest=args.ingest, ingest_prefetch=args.prefetch,
+        sketch_quantization=args.quantize,
+    ).validate()
 
     key = jax.random.PRNGKey(0)
     kd, kf, kdec, kl = jax.random.split(key, 4)
@@ -66,10 +84,7 @@ def main():
         kd, args.n, args.k, args.dim, return_labels=True
     )
 
-    cfg = CKMConfig(
-        k=args.k, sketch_backend=args.backend,
-        sketch_quantization=args.quantize, decoder=args.decoder,
-    )
+    cfg = CKMConfig(k=args.k, decoder=args.decoder, **job.ckm_overrides())
     m = cfg.sketch_size(args.dim)
     from repro.core import frequencies as fq
     from repro.core import quantize as qz
@@ -93,8 +108,8 @@ def main():
     bits = qz.parse_bits(args.quantize)
     wire = qz.state_wire_bytes(m, args.n, bits)
     print(
-        f"[1] {args.backend} sketch: {t_sketch:.2f}s  (m={m}, one pass, "
-        f"quantize={args.quantize}, merge wire bytes/state={wire})"
+        f"[1] sketch ({job.describe()}): {t_sketch:.2f}s  (m={m}, one pass, "
+        f"merge wire bytes/state={wire})"
     )
 
     t0 = time.perf_counter()

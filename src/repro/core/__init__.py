@@ -1,7 +1,8 @@
 """Public API of the compressive K-means core.
 
 The paper's pipeline is sketch -> decode; both halves are pluggable
-subsystems (``engine.SketchEngine`` backends/state transforms on the sketch
+subsystems (``engine.SketchEngine`` backends/state transforms plus the
+``ingest`` pipeline and ``topology`` merge-schedule registry on the sketch
 side, the ``decoders`` registry on the decode side) behind one config:
 
     from repro.core import CKMConfig, fit, sse, predict
@@ -31,6 +32,17 @@ from repro.core.decoders import (
     register_decoder,
 )
 from repro.core.engine import BACKENDS, SketchEngine
+from repro.core.ingest import BatchSource, IngestStats, ingest_stream, prefetched
+from repro.core.topology import (
+    TOPOLOGIES,
+    StragglerMerger,
+    Topology,
+    available_topologies,
+    axis_reduce,
+    reduce_states,
+    register_topology,
+    wire_cost_model,
+)
 
 __all__ = [
     "CKMConfig",
@@ -49,4 +61,16 @@ __all__ = [
     "register_decoder",
     "BACKENDS",
     "SketchEngine",
+    "BatchSource",
+    "IngestStats",
+    "ingest_stream",
+    "prefetched",
+    "TOPOLOGIES",
+    "Topology",
+    "StragglerMerger",
+    "available_topologies",
+    "axis_reduce",
+    "reduce_states",
+    "register_topology",
+    "wire_cost_model",
 ]

@@ -17,7 +17,11 @@ The pipeline is exactly the paper's four steps:
 Beyond the paper, ``CKMConfig.sketch_quantization`` switches step 3 to the
 QCKM universally-quantized sketch (``core.quantize``): per-point 1-bit/b-bit
 integer codes, dequantized via the E[sign] correction before step 4 — the
-decoders are unchanged (see ``docs/architecture.md``).
+decoders are unchanged (see ``docs/architecture.md``).  Step 3's scaling
+knobs: ``CKMConfig.ingest="async"`` overlaps batch production with sketch
+compute in ``fit_streaming`` (``core.ingest``), and
+``CKMConfig.reduce_topology`` picks the sharded backend's cross-device merge
+schedule (``core.topology``; see ``docs/scaling.md``).
 
 Replicates are ``lax.map``-ed over PRNG keys and selected by the value of the
 sketch-domain cost (4) — the SSE is *not* available once data is discarded.
@@ -65,6 +69,18 @@ class CKMConfig:
     # core.engine.SketchEngine's backend matrix).  "sharded" needs a mesh
     # passed to fit()/compute_sketch().
     sketch_backend: str = "xla"
+    # Cross-device merge schedule of the sharded backend (and of host-level
+    # reduce_partials): any name registered in core.topology — "allreduce"
+    # (native psum), "tree" (butterfly, log2 p hops), "ring" (token passing).
+    # Every topology produces the same sketch (bitwise when quantized); the
+    # choice trades wire bytes vs hop count — see docs/scaling.md.
+    reduce_topology: str = "allreduce"
+    # Streaming ingest mode for fit_streaming: "sync" feeds the engine batch
+    # by batch; "async" overlaps batch production/transfer with sketch
+    # compute through core.ingest (double-buffered producer thread,
+    # ingest_prefetch batches staged).  Results are identical either way.
+    ingest: str = "sync"
+    ingest_prefetch: int = 2
     # Universal quantization of the sketch (QCKM): "none" | "1bit" | "<b>bit".
     # Per-point contributions are quantized to integer codes of the dithered
     # phase and accumulated in int32; finalize dequantizes via the E[sign]
@@ -150,10 +166,11 @@ def make_quantizer(key: jax.Array, cfg: CKMConfig, m: int):
 def make_engine(
     w: jax.Array, cfg: CKMConfig, mesh=None, quantizer=None
 ) -> SketchEngine:
-    """The SketchEngine for ``cfg`` — backend + quantization are config flags."""
+    """The SketchEngine for ``cfg`` — backend, quantization and the merge
+    topology are config flags."""
     return SketchEngine(
         w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh,
-        quantizer=quantizer,
+        quantizer=quantizer, reduce_topology=cfg.reduce_topology,
     )
 
 
@@ -194,6 +211,10 @@ def compute_sketch_streaming(
     is then folded into the engine state.  Returns the first batch as the
     last element so callers may reuse it for sample/kpp decoder inits.
     """
+    if cfg.ingest not in ("sync", "async"):
+        raise ValueError(
+            f"CKMConfig.ingest must be 'sync' or 'async', got {cfg.ingest!r}"
+        )
     it = iter(batches)
     try:
         first = jnp.asarray(next(it), jnp.float32)
@@ -203,8 +224,23 @@ def compute_sketch_streaming(
     quantizer = make_quantizer(key, cfg, w.shape[1])
     eng = make_engine(w, cfg, mesh, quantizer)
     state = eng.update(eng.init_state(), first)
-    for batch in it:
-        state = eng.update(state, batch)
+    if cfg.ingest == "async":
+        # Overlap production/transfer of the remaining batches with sketch
+        # compute (core.ingest).  Same batches, same order -> same result.
+        from repro.core import ingest as ingest_mod
+
+        state, _ = ingest_mod.ingest_stream(
+            eng, it, state=state, prefetch=cfg.ingest_prefetch
+        )
+    else:
+        for batch in it:
+            state = eng.update(state, batch)
+            # Strict streaming backpressure: the batch may be discarded the
+            # moment it is folded in (the O(m)-memory contract).  Without
+            # this, async dispatch would buffer every pending batch whenever
+            # the source outruns compute.  ingest="async" relaxes it to a
+            # bounded double buffer (core.ingest) to overlap the two.
+            jax.block_until_ready(state)
     z, lo, hi = eng.finalize(state)
     return z, w, sigma2, (lo, hi), first
 

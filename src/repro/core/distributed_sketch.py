@@ -95,6 +95,7 @@ def sharded_sketch(
     mesh: Mesh,
     data_axes: Sequence[str] = ("data",),
     chunk: int = 8192,
+    reduce_topology: str = "allreduce",
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One-pass distributed sketch + bounds over a device mesh.
 
@@ -102,13 +103,15 @@ def sharded_sketch(
     hold replicas).  Returns the *replicated* ``(z, lo, hi)``.
 
     Thin wrapper over the unified :class:`repro.core.engine.SketchEngine`
-    (backend="sharded") — the mesh psum-merge IS the engine's ``merge``
-    expressed as a collective.
+    (backend="sharded") — the cross-device merge IS the engine's ``merge``
+    expressed as a collective, and ``reduce_topology`` picks its schedule
+    ("allreduce" | "tree" | "ring", see ``core.topology``).
     """
     from repro.core.engine import SketchEngine
 
     eng = SketchEngine(
-        w, "sharded", chunk=chunk, mesh=mesh, data_axes=tuple(data_axes)
+        w, "sharded", chunk=chunk, mesh=mesh, data_axes=tuple(data_axes),
+        reduce_topology=reduce_topology,
     )
     return eng.sketch(x)
 

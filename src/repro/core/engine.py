@@ -56,6 +56,18 @@ integer accumulators; the 32x factor applies to the raw per-sample codes).
 ``(z, lower, upper)`` contract, so consumers — CLOMPR included — are unchanged.
 See ``docs/architecture.md`` for the full contract and ``core.quantize`` for
 the encoding/decoding math.
+
+Scaling hooks
+-------------
+Batch *production* and cross-device *merging* are pluggable too.
+``core.ingest`` overlaps host-side batch generation/transfer with ``update``
+(double-buffered producer thread behind the ``BatchSource`` protocol —
+``sketch_stream(..., async_ingest=True)`` or ``CKMConfig.ingest="async"``),
+and ``core.topology`` makes the merge *schedule* a registry choice:
+``reduce_topology="allreduce" | "tree" | "ring"`` selects how the sharded
+backend combines per-device partials (and how :meth:`SketchEngine.reduce_partials`
+folds host-level partials).  Every schedule yields the same sketch — bitwise
+on the quantized path — by the monoid laws above.  See ``docs/scaling.md``.
 """
 
 from __future__ import annotations
@@ -69,6 +81,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import quantize as qz
 from repro.core import sketch as sk
+from repro.core import topology as topo
+from repro.parallel.sharding import axis_extent
 from repro.utils import compat
 
 __all__ = [
@@ -166,6 +180,12 @@ class SketchEngine:
     quantizer : optional ``core.quantize.SketchQuantizer`` — switches the
         engine to the quantized state transform (int32 code accumulators,
         unit weights only; see the module doc's "State transforms").
+    reduce_topology : merge schedule for the sharded backend's cross-device
+        combine and for :meth:`reduce_partials` — any name registered in
+        ``core.topology`` (``"allreduce"`` | ``"tree"`` | ``"ring"``).  The
+        monoid laws make every schedule produce the same sketch (bitwise on
+        the quantized path); the choice trades wire bytes against hop count
+        (``core.topology.wire_cost_model``, ``docs/scaling.md``).
     """
 
     def __init__(
@@ -180,11 +200,13 @@ class SketchEngine:
         mesh: Mesh | None = None,
         data_axes: Sequence[str] = ("data",),
         quantizer: qz.SketchQuantizer | None = None,
+        reduce_topology: str = "allreduce",
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if backend == "sharded" and mesh is None:
             raise ValueError("backend='sharded' requires a mesh")
+        topo.get_topology(reduce_topology)  # fail fast on unknown names
         self.w = jnp.asarray(w, jnp.float32)
         self.n, self.m = self.w.shape
         self.backend = backend
@@ -194,6 +216,7 @@ class SketchEngine:
         self.interpret = interpret
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
+        self.reduce_topology = reduce_topology
         if quantizer is not None and quantizer.dither.shape != (self.m,):
             raise ValueError(
                 f"quantizer dither shape {quantizer.dither.shape} != (m,)="
@@ -249,6 +272,19 @@ class SketchEngine:
         """Associative + commutative combine of two partial states."""
         return _merge_states(a, b)
 
+    def reduce_partials(self, states, topology: str | None = None):
+        """Reduce many partial states through a named merge schedule.
+
+        Host-level counterpart of the sharded backend's in-mesh collective:
+        partials built anywhere (other hosts, edge sketchers, delayed
+        stragglers) are folded with ``merge`` following the engine's
+        ``reduce_topology`` (or an override).  Any schedule and any arrival
+        order give the same state — bitwise for quantized int32 partials.
+        """
+        return topo.reduce_states(
+            self.merge, states, topology or self.reduce_topology
+        )
+
     def finalize(self, state):
         """-> ``(z stacked-real (2m,), lower (n,), upper (n,))``.
 
@@ -281,14 +317,42 @@ class SketchEngine:
         """One-shot ``(z, lower, upper)`` — init/update/finalize in one call."""
         return self.finalize(self.update(self.init_state(), x, weights))
 
-    def sketch_stream(self, batches: Iterable[jax.Array]):
-        """One pass over an iterator of ``(B_i, n)`` batches -> (z, lo, hi)."""
+    def sketch_stream(
+        self,
+        batches: Iterable[jax.Array],
+        *,
+        async_ingest: bool = False,
+        prefetch: int = 2,
+    ):
+        """One pass over an iterator of ``(B_i, n)`` batches -> (z, lo, hi).
+
+        ``async_ingest=True`` routes the pass through
+        ``core.ingest.ingest_stream``: a producer thread keeps ``prefetch``
+        batches staged on device so batch production overlaps sketch compute.
+        Same batches, same order, identical result.
+        """
+        if async_ingest:
+            from repro.core import ingest as ingest_mod
+
+            state, _ = ingest_mod.ingest_stream(self, batches, prefetch=prefetch)
+            return self.finalize(state)
         state = self.init_state()
         for batch in batches:
             state = self.update(state, batch)
         return self.finalize(state)
 
     # -- backend dispatch ---------------------------------------------------
+
+    def _check_vma(self) -> bool | None:
+        """Replication-checker setting for the sharded backend's shard_map.
+
+        tree/ring reductions return ppermute-derived values the VMA checker
+        cannot see as replicated (they are — exactly for integers, to
+        association-order ulps for floats), so newer-JAX checking must be
+        off for them; the default allreduce (psum) keeps the checker at its
+        default as a safety net for future body edits.
+        """
+        return False if self.reduce_topology != "allreduce" else None
 
     def _batch_state(self, x: jax.Array, weights: jax.Array) -> SketchEngineState:
         if self.backend == "sharded":
@@ -363,11 +427,9 @@ class SketchEngine:
         q = self.quantizer
         axes = self.data_axes
         chunk = self.chunk
+        topology = self.reduce_topology
         b = x.shape[0]
-        extent = 1
-        for a in axes:
-            extent *= self.mesh.shape[a]
-        pad = (-b) % extent
+        pad = (-b) % axis_extent(self.mesh, axes)
         valid = jnp.ones((b,), jnp.float32)
         if pad:
             x = jnp.concatenate(
@@ -385,11 +447,14 @@ class SketchEngine:
                 chunk=min(chunk, max(x_shard.shape[0], 1)),
                 vary_axes=axes,
             )
-            qcos = jax.lax.psum(qcos, axes)
-            qsin = jax.lax.psum(qsin, axes)
-            cnt = jax.lax.psum(jnp.sum(valid_shard), axes)
-            lo = jax.lax.pmin(jnp.min(x_shard, axis=0), axes)
-            hi = jax.lax.pmax(jnp.max(x_shard, axis=0), axes)
+            # Cross-device merge of the int32 code sums through the selected
+            # topology — the engine's monoid `merge` expressed as a
+            # collective schedule (bitwise identical for every topology).
+            qcos = topo.axis_reduce(qcos, axes, topology)
+            qsin = topo.axis_reduce(qsin, axes, topology)
+            cnt = topo.axis_reduce(jnp.sum(valid_shard), axes, topology)
+            lo = topo.axis_reduce(jnp.min(x_shard, axis=0), axes, topology, op="min")
+            hi = topo.axis_reduce(jnp.max(x_shard, axis=0), axes, topology, op="max")
             return qcos, qsin, cnt, lo, hi
 
         fn = compat.shard_map(
@@ -397,6 +462,7 @@ class SketchEngine:
             mesh=self.mesh,
             in_specs=(P(axes), P(), P(), P(axes)),
             out_specs=(P(), P(), P(), P(), P()),
+            check_vma=self._check_vma(),
         )
         qcos, qsin, cnt, lo, hi = fn(x, self.w, q.dither, valid)
         return QuantizedSketchEngineState(
@@ -406,16 +472,14 @@ class SketchEngine:
     def _sharded_batch_state(self, x: jax.Array, weights: jax.Array) -> SketchEngineState:
         axes = self.data_axes
         chunk = self.chunk
+        topology = self.reduce_topology
         b = x.shape[0]
         # shard_map needs the leading axis divisible by the data-axis extent;
         # streaming batches (ragged tail chunks) generally aren't.  Pad with
         # zero-weight copies of the first row: weight 0 keeps the sums exact
         # and a copied point cannot move the min/max bounds.  True count is
         # taken from the unpadded batch below.
-        extent = 1
-        for a in axes:
-            extent *= self.mesh.shape[a]
-        pad = (-b) % extent
+        pad = (-b) % axis_extent(self.mesh, axes)
         if pad:
             x = jnp.concatenate(
                 [x, jnp.broadcast_to(x[:1], (pad, x.shape[1]))], axis=0
@@ -433,11 +497,11 @@ class SketchEngine:
                 vary_axes=axes,
             )
             m = w_rep.shape[1]
-            cos_s = jax.lax.psum(part[:m], axes)
-            sin_s = jax.lax.psum(-part[m:], axes)
-            wsum = jax.lax.psum(jnp.sum(wt_shard), axes)
-            lo = jax.lax.pmin(jnp.min(x_shard, axis=0), axes)
-            hi = jax.lax.pmax(jnp.max(x_shard, axis=0), axes)
+            cos_s = topo.axis_reduce(part[:m], axes, topology)
+            sin_s = topo.axis_reduce(-part[m:], axes, topology)
+            wsum = topo.axis_reduce(jnp.sum(wt_shard), axes, topology)
+            lo = topo.axis_reduce(jnp.min(x_shard, axis=0), axes, topology, op="min")
+            hi = topo.axis_reduce(jnp.max(x_shard, axis=0), axes, topology, op="max")
             return cos_s, sin_s, wsum, lo, hi
 
         fn = compat.shard_map(
@@ -445,6 +509,7 @@ class SketchEngine:
             mesh=self.mesh,
             in_specs=(P(axes), P(), P(axes)),
             out_specs=(P(), P(), P(), P(), P()),
+            check_vma=self._check_vma(),
         )
         cos_s, sin_s, wsum, lo, hi = fn(x, self.w, weights)
         return SketchEngineState(
@@ -461,9 +526,6 @@ class SketchEngine:
         assert self.mesh is not None
         from jax.sharding import NamedSharding
 
-        extent = 1
-        for a in self.data_axes:
-            extent *= self.mesh.shape[a]
-        if x.shape[0] % extent:
+        if x.shape[0] % axis_extent(self.mesh, self.data_axes):
             return x
         return jax.device_put(x, NamedSharding(self.mesh, P(self.data_axes)))

@@ -1,0 +1,250 @@
+"""Async sketch ingest: overlap batch production with sketch computation.
+
+``ckm.fit_streaming`` is one pass of ``engine.update`` over a batch iterator.
+Fed synchronously, the wall-clock is the *sum* of host-side batch production
+(decode / synthesis / disk / network) and device-side sketch compute — the
+host sits idle while the device sketches and vice versa.  Since the sketch is
+a fold over a commutative monoid, nothing about the result depends on when a
+batch was produced, so the two stages pipeline freely:
+
+    producer thread:  source -> jnp.float32 -> device_put ->  bounded queue
+    consumer (caller):          queue -> engine.update (monoid fold)
+
+Both ingest modes enforce **bounded resident batches** — that is the point
+of streaming.  The sync path (``ckm.compute_sketch_streaming``) applies
+strict per-batch backpressure: fold, block, discard, so exactly one batch is
+ever alive (letting JAX's async dispatch queue pending updates instead would
+keep every queued batch buffer alive whenever the source outruns compute —
+an unbounded working set wearing a streaming API).  The async path relaxes
+that to ``prefetch + 2`` resident batches: ``prefetch`` staged in the
+queue, one being folded by the consumer, and at most one already produced
+but blocked on a full queue, and ``device_put`` in the
+producer starts the host-to-device copy before the consumer needs the
+batch, so transfer also rides under compute.  Optionally the carried state's
+buffers are donated back to the update step (``donate=True``, opt-in), so
+the O(m) accumulators are updated in place instead of reallocated per batch
+— see :func:`ingest_stream` for the float-identity caveat that keeps
+donation off by default.
+
+The async path folds the *same batches in the same order* with the same ops
+as the sync path — results are identical, not merely close
+(``tests/test_ingest.py`` pins equality).  Overlap won is reported in
+:class:`IngestStats`; ``benchmarks/kernels.py`` records it (and the
+sync-vs-async speedup) into ``experiments/paper/kernels.json``.
+
+Anything iterable that yields ``(B_i, n)`` arrays is a valid source — the
+:class:`BatchSource` protocol below is what ``data/pipeline.py``'s
+``chunked`` and ``SyntheticLM.embedding_stream`` already satisfy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Iterator, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BatchSource",
+    "IngestStats",
+    "prefetched",
+    "ingest_stream",
+]
+
+
+@runtime_checkable
+class BatchSource(Protocol):
+    """Anything that can be iterated into ``(B_i, n)`` point batches.
+
+    Batch sizes may be ragged; each batch must share the feature dimension.
+    Plain generators, ``data.pipeline.chunked(x, size)`` views, and
+    ``SyntheticLM.embedding_stream`` all conform.
+    """
+
+    def __iter__(self) -> Iterator[Any]: ...
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Timing breakdown of one ingest run.
+
+    ``produce_s`` is time spent inside the source + transfer (producer
+    thread), ``compute_s`` time inside ``engine.update`` (consumer),
+    ``consumer_wait_s`` time the consumer starved on an empty queue,
+    ``producer_wait_s`` time the producer blocked on a full one.
+    """
+
+    batches: int = 0
+    points: int = 0
+    produce_s: float = 0.0
+    compute_s: float = 0.0
+    consumer_wait_s: float = 0.0
+    producer_wait_s: float = 0.0
+    wall_s: float = 0.0
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of the maximum hideable time actually hidden, in [0, 1].
+
+        A serial loop takes ``produce_s + compute_s``; perfect overlap takes
+        ``max(produce_s, compute_s)`` — the difference that *could* be hidden
+        is ``min(produce_s, compute_s)``, and what *was* hidden is the serial
+        total minus the measured wall clock.
+        """
+        hideable = min(self.produce_s, self.compute_s)
+        if hideable <= 0.0 or self.wall_s <= 0.0:
+            return 0.0
+        hidden = self.produce_s + self.compute_s - self.wall_s
+        return max(0.0, min(1.0, hidden / hideable))
+
+
+_DONE = object()
+
+
+def _put_until_stopped(q: "queue.Queue", item, stop: threading.Event):
+    """Enqueue ``item`` unless the consumer has already walked away."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=0.1)
+            return
+        except queue.Full:
+            continue
+
+
+def prefetched(
+    source: BatchSource,
+    prefetch: int = 2,
+    *,
+    place=None,
+    stats: IngestStats | None = None,
+) -> Iterator[Any]:
+    """Iterate ``source`` through a producer thread + bounded queue.
+
+    ``prefetch`` is the queue depth (2 = classic double buffering: one batch
+    in flight while the previous is consumed).  ``place`` optionally maps
+    each raw batch onto its device layout inside the producer (e.g.
+    ``jax.device_put`` or the engine's ``shard_points``) so the transfer
+    overlaps consumer compute.  Exceptions raised by the source are re-raised
+    at the consumer's next pull, with the producer shut down cleanly.
+    """
+    if prefetch < 1:
+        raise ValueError(f"prefetch depth must be >= 1, got {prefetch}")
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def produce():
+        try:
+            it = iter(source)
+            while True:
+                t0 = time.perf_counter()
+                try:
+                    batch = next(it)  # source generation / I-O happens here
+                except StopIteration:
+                    break
+                if place is not None:
+                    batch = place(batch)
+                if stats is not None:
+                    stats.produce_s += time.perf_counter() - t0
+                while not stop.is_set():
+                    t0 = time.perf_counter()
+                    try:
+                        q.put(batch, timeout=0.1)
+                        if stats is not None:
+                            stats.producer_wait_s += time.perf_counter() - t0
+                        break
+                    except queue.Full:
+                        if stats is not None:
+                            stats.producer_wait_s += time.perf_counter() - t0
+                if stop.is_set():
+                    return
+            _put_until_stopped(q, _DONE, stop)
+        except BaseException as e:  # noqa: BLE001 — relayed to the consumer
+            _put_until_stopped(q, e, stop)
+
+    worker = threading.Thread(target=produce, name="sketch-ingest", daemon=True)
+    worker.start()
+    try:
+        while True:
+            t0 = time.perf_counter()
+            item = q.get()
+            if stats is not None:
+                stats.consumer_wait_s += time.perf_counter() - t0
+            if item is _DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        stop.set()
+        worker.join(timeout=5.0)
+
+
+def ingest_stream(
+    engine,
+    source: BatchSource,
+    *,
+    state=None,
+    prefetch: int = 2,
+    donate: bool | None = None,
+) -> tuple[Any, IngestStats]:
+    """Fold ``source`` into an engine state with production/compute overlap.
+
+    Drives ``engine.update`` exactly like a sync loop would — same batches,
+    same order, identical result — while a producer thread keeps ``prefetch``
+    batches staged (converted to f32 and placed on device).  Returns the
+    final *unfinalized* state (callers may keep merging partials into it —
+    e.g. through ``core.topology.reduce_states`` — before ``finalize``) and
+    the :class:`IngestStats` describing the overlap achieved.
+
+    ``donate=True`` (default off) wraps the fold step in one jit with the
+    carried state donated, letting XLA update the O(m) accumulators in
+    place on accelerators.  Opt-in because it trades away the bitwise
+    sync-equality guarantee on the float path: fusing update into a single
+    jit may reassociate float ops (results stay within normal float
+    tolerance, ~1e-6).  The incoming ``state`` is copied first, so the
+    caller's buffers survive donation.
+    """
+    stats = IngestStats()
+    if state is None:
+        state = engine.init_state()
+
+    def place(batch):
+        x = jnp.asarray(batch, jnp.float32)
+        if engine.backend == "sharded":
+            return engine.shard_points(x)
+        return jax.device_put(x)
+
+    if donate is None:
+        donate = False
+    update = engine.update
+    if donate:
+        # Donating the carried state lets XLA update the O(m) accumulators in
+        # place.  jit retraces per batch shape (streams have at most one
+        # ragged tail shape, so two traces).  The first donated call would
+        # invalidate the caller's `state` buffers, so carry a private copy.
+        state = jax.tree_util.tree_map(jnp.array, state)
+        update = jax.jit(
+            lambda s, b: engine.update(s, b), donate_argnums=(0,)
+        )
+
+    t_start = time.perf_counter()
+    for batch in prefetched(source, prefetch, place=place, stats=stats):
+        t0 = time.perf_counter()
+        state = update(state, batch)
+        # Block per batch: streaming means a batch is *discarded* once folded
+        # in — without this, JAX's async dispatch would queue arbitrarily
+        # many pending updates (and keep their batch buffers alive) whenever
+        # production outruns compute, silently unbounding the O(m) working
+        # set.  Resident batches stay bounded at prefetch + 2 (queue + this
+        # one + the producer's in-hand batch), and the produce/compute
+        # split in the stats is truthful.
+        jax.block_until_ready(state)
+        stats.compute_s += time.perf_counter() - t0
+        stats.batches += 1
+        stats.points += int(batch.shape[0])
+    stats.wall_s = time.perf_counter() - t_start
+    return state, stats

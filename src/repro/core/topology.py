@@ -1,0 +1,322 @@
+"""Pluggable reduction topologies for the SketchEngine's monoid ``merge``.
+
+The engine's contract (``core/engine.py``) is that partial sketch states form
+a **commutative monoid**: any merge schedule — flat all-reduce, binary tree,
+ring token passing, stragglers folded in whenever they arrive — yields the
+same finalized sketch.  This module makes the *schedule* a first-class,
+registered object so the cross-device (and cross-host) cost of the merge can
+be chosen per deployment instead of being hard-wired to one ``psum``:
+
+- **host level** — :func:`reduce_states` folds a list of partial states with
+  the engine's ``merge`` following a named schedule; :class:`StragglerMerger`
+  is the online variant that absorbs partials in *arrival* order (delayed
+  stragglers are legal by commutativity).
+- **device level** — :func:`axis_reduce` is the in-``shard_map`` collective
+  the sharded backend calls instead of a bare ``jax.lax.psum``: ``allreduce``
+  lowers to the native psum/pmin/pmax, ``tree`` to a butterfly
+  (recursive-doubling) exchange of ``ppermute`` steps, ``ring`` to token
+  passing around the data axis.  All are built from ``jax.lax`` collectives,
+  so they work under the ``utils/compat.py`` shard_map shim on every JAX
+  version — call sites never touch ``jax.shard_map`` directly.
+
+Why topology choice matters: for a p-device merge of an S-byte partial state,
+the three schedules move different amounts of data and serialize different
+numbers of hops (:func:`wire_cost_model`).  With QCKM-quantized int32 states
+2-4x smaller on the wire (``core.quantize.state_wire_bytes``), the per-hop
+latency term starts to dominate, and tree (log2 p hops) beats ring (p-1 hops)
+on high-latency links while ring wins on bandwidth-bound fat states.
+
+Numerics: integer states (the quantized path) reduce **bitwise identically**
+under every topology — int32 addition is exactly associative and commutative.
+Float states agree to roundoff (~1e-6 relative): the schedules re-associate
+sums, which is exactly the freedom the monoid contract grants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Topology",
+    "TOPOLOGIES",
+    "register_topology",
+    "get_topology",
+    "available_topologies",
+    "merge_schedule",
+    "reduce_states",
+    "StragglerMerger",
+    "axis_reduce",
+    "wire_cost_model",
+]
+
+# Elementwise combine ops a reduction may carry.  "sum" is the monoid's
+# accumulator add; "min"/"max" merge the box bounds harvested in the same pass.
+_COMBINE = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+_PSUM_LIKE = {"sum": jax.lax.psum, "min": jax.lax.pmin, "max": jax.lax.pmax}
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A named merge schedule.
+
+    ``plan(n)`` returns the host-level schedule as rounds of ``(dst, src)``
+    merges over ``n`` partial states: within a round, merges touch disjoint
+    states (they could run concurrently); ``dst`` accumulates ``src`` and the
+    reduction's result ends up at ``root(n)``.  ``device_reduce`` performs the
+    equivalent in-mesh collective over one named axis (inside ``shard_map``).
+    """
+
+    name: str
+    plan: Callable[[int], list[list[tuple[int, int]]]]
+    device_reduce: Callable[[jax.Array, str, Callable], jax.Array]
+    root: Callable[[int], int] = lambda n: 0
+
+
+TOPOLOGIES: dict[str, Topology] = {}
+
+
+def register_topology(topo: Topology) -> Topology:
+    """Add a topology to the registry (name collisions are an error)."""
+    if topo.name in TOPOLOGIES:
+        raise ValueError(f"topology {topo.name!r} already registered")
+    TOPOLOGIES[topo.name] = topo
+    return topo
+
+
+def get_topology(name: str) -> Topology:
+    if name not in TOPOLOGIES:
+        raise ValueError(
+            f"unknown reduce topology {name!r}; registered: "
+            f"{available_topologies()}"
+        )
+    return TOPOLOGIES[name]
+
+
+def available_topologies() -> tuple[str, ...]:
+    return tuple(sorted(TOPOLOGIES))
+
+
+# ---------------------------------------------------------------------------
+# Host-level plans
+# ---------------------------------------------------------------------------
+
+
+def _flat_plan(n: int) -> list[list[tuple[int, int]]]:
+    """All-reduce stand-in on the host: one accumulator, everyone folds in.
+
+    (A real psum is p concurrent reduce-scatters; host-side the equivalent
+    work is a flat left fold into rank 0.)
+    """
+    return [[(0, i)] for i in range(1, n)]
+
+
+def _tree_plan(n: int) -> list[list[tuple[int, int]]]:
+    """Balanced binary tree: ceil(log2 n) rounds of disjoint pairwise merges."""
+    rounds: list[list[tuple[int, int]]] = []
+    step = 1
+    while step < n:
+        rnd = [
+            (dst, dst + step)
+            for dst in range(0, n - step, 2 * step)
+        ]
+        if rnd:
+            rounds.append(rnd)
+        step *= 2
+    return rounds
+
+
+def _ring_plan(n: int) -> list[list[tuple[int, int]]]:
+    """Token passing: rank i hands its accumulated token to rank i+1."""
+    return [[(i + 1, i)] for i in range(n - 1)]
+
+
+def merge_schedule(n: int, topology: str) -> list[list[tuple[int, int]]]:
+    """The host-level schedule ``topology`` uses to reduce ``n`` partials."""
+    if n < 1:
+        raise ValueError(f"need at least one partial state, got n={n}")
+    return get_topology(topology).plan(n)
+
+
+def reduce_states(
+    merge: Callable[[Any, Any], Any],
+    states: Sequence[Any],
+    topology: str = "allreduce",
+    order: Sequence[int] | None = None,
+) -> Any:
+    """Fold partial states with ``merge`` following a named schedule.
+
+    ``order`` optionally permutes the states first — the *arrival* order of
+    delayed stragglers.  By the monoid laws every (topology, order) pair
+    produces the same result: bitwise for integer states, to roundoff for
+    float.  That invariance is property-tested in ``tests/test_topology.py``.
+    """
+    states = list(states)
+    if order is not None:
+        if sorted(order) != list(range(len(states))):
+            raise ValueError(f"order must permute range({len(states)})")
+        states = [states[i] for i in order]
+    if not states:
+        raise ValueError("need at least one partial state")
+    topo = get_topology(topology)
+    slots: list[Any] = list(states)
+    for rnd in topo.plan(len(states)):
+        for dst, src in rnd:
+            slots[dst] = merge(slots[dst], slots[src])
+    return slots[topo.root(len(states))]
+
+
+class StragglerMerger:
+    """Online, arrival-order fold — the straggler-tolerant merge.
+
+    A coordinator does not have to wait for a schedule: partial states can be
+    absorbed the moment they arrive (``add``), in any order, and the result is
+    the same monoid reduction.  ``identity`` is the engine's ``init_state()``.
+    """
+
+    def __init__(self, merge: Callable[[Any, Any], Any], identity: Any):
+        self._merge = merge
+        self._acc = identity
+        self.arrived = 0
+
+    def add(self, state: Any) -> "StragglerMerger":
+        self._acc = self._merge(self._acc, state)
+        self.arrived += 1
+        return self
+
+    def result(self) -> Any:
+        return self._acc
+
+
+# ---------------------------------------------------------------------------
+# Device-level (in-shard_map) collectives
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(axis_name: str) -> int:
+    # psum of a concrete 1 is evaluated at trace time -> a static int.
+    return int(jax.lax.psum(1, axis_name))
+
+
+def _allreduce_device(x: jax.Array, axis_name: str, combine) -> jax.Array:
+    op = {jnp.add: "sum", jnp.minimum: "min", jnp.maximum: "max"}[combine]
+    return _PSUM_LIKE[op](x, axis_name)
+
+
+def _tree_device(x: jax.Array, axis_name: str, combine) -> jax.Array:
+    """Butterfly (recursive doubling): log2 p full-permutation exchanges.
+
+    Every step XORs the partner index, so all devices participate in every
+    hop — no zero-filled ``ppermute`` holes, which keeps the same schedule
+    valid for min/max bound merges, not just sums.
+    """
+    p = _axis_size(axis_name)
+    if p & (p - 1):
+        raise ValueError(
+            f"tree (butterfly) reduction needs a power-of-two axis size, got "
+            f"{p}; use 'ring' or 'allreduce' for this mesh"
+        )
+    step = 1
+    while step < p:
+        peer = jax.lax.ppermute(
+            x, axis_name, [(i, i ^ step) for i in range(p)]
+        )
+        x = combine(x, peer)
+        step *= 2
+    return x
+
+
+def _ring_device(x: jax.Array, axis_name: str, combine) -> jax.Array:
+    """Ring token passing: p-1 neighbour hops, each carries the running fold.
+
+    Unchunked (the whole state is the token): per-device traffic is
+    (p-1)·S — latency-light per hop but bandwidth-heavier than psum's
+    reduce-scatter; see :func:`wire_cost_model`.
+    """
+    p = _axis_size(axis_name)
+    acc = x
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    for _ in range(p - 1):
+        acc = combine(jax.lax.ppermute(acc, axis_name, perm), x)
+    return acc
+
+
+register_topology(
+    Topology("allreduce", _flat_plan, _allreduce_device)
+)
+register_topology(Topology("tree", _tree_plan, _tree_device))
+register_topology(
+    Topology("ring", _ring_plan, _ring_device, root=lambda n: n - 1)
+)
+
+
+def axis_reduce(
+    x: jax.Array,
+    axis_names: Sequence[str] | str,
+    topology: str = "allreduce",
+    op: str = "sum",
+) -> jax.Array:
+    """Reduce ``x`` over mesh ``axis_names`` inside a ``shard_map`` body.
+
+    Drop-in for ``jax.lax.psum(x, axes)`` / ``pmin`` / ``pmax`` (``op``) that
+    routes through the registered topology.  Multiple axes reduce
+    sequentially, one collective per axis — a (data, pod) reduction becomes a
+    within-pod pass followed by a cross-pod pass, which is exactly the
+    hierarchical schedule multi-host deployments want.
+    """
+    if op not in _COMBINE:
+        raise ValueError(f"op must be one of {sorted(_COMBINE)}, got {op!r}")
+    topo = get_topology(topology)
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    for ax in axis_names:
+        x = topo.device_reduce(x, ax, _COMBINE[op])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def wire_cost_model(state_bytes: int, p: int, topology: str) -> dict:
+    """Per-device bytes sent and serialized hop count for a p-way merge.
+
+    The standard alpha-beta model of one S-byte monoid state reduced over p
+    links (documented in ``docs/scaling.md``'s topology matrix):
+
+    ==========  =======================  ==================
+    topology    bytes sent / device      serialized hops
+    ==========  =======================  ==================
+    allreduce   2·S·(p-1)/p              2·(p-1)   (ring RS+AG, the usual psum lowering)
+    tree        S·log2(p)                log2(p)
+    ring        S·(p-1)                  p-1       (unchunked token)
+    ==========  =======================  ==================
+    """
+    get_topology(topology)  # validate the name
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    if p == 1:
+        return {"topology": topology, "p": 1, "bytes_per_device": 0, "hops": 0}
+    if topology == "allreduce":
+        bytes_dev = 2.0 * state_bytes * (p - 1) / p
+        hops = 2 * (p - 1)
+    elif topology == "tree":
+        hops = max(1, math.ceil(math.log2(p)))
+        bytes_dev = float(state_bytes * hops)
+    elif topology == "ring":
+        bytes_dev = float(state_bytes * (p - 1))
+        hops = p - 1
+    else:  # a user-registered topology: no closed form — report unknowns
+        return {"topology": topology, "p": p, "bytes_per_device": None,
+                "hops": None}
+    return {
+        "topology": topology,
+        "p": p,
+        "bytes_per_device": bytes_dev,
+        "hops": hops,
+    }

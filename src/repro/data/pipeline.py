@@ -120,8 +120,28 @@ class SyntheticLM:
 def chunked(x, size: int) -> Iterator[jax.Array]:
     """View an in-memory ``(N, n)`` array as a batch iterator of ``size``-row
     chunks (last chunk ragged) — adapts datasets to the one-pass streaming
-    API; also the reference harness for streaming-vs-in-memory parity tests."""
+    API (a ``core.ingest.BatchSource``); also the reference harness for
+    streaming-vs-in-memory parity tests."""
     if size <= 0:
         raise ValueError(f"chunk size must be positive, got {size}")
     for i in range(0, x.shape[0], size):
         yield x[i : i + size]
+
+
+def with_latency(source, seconds: float) -> Iterator[jax.Array]:
+    """Model a host-I/O-bound ``BatchSource``: each batch costs ``seconds``
+    of producer time before it is yielded (disk read, network fetch, decode).
+
+    This is the stand-in for the regime the paper targets — data arriving
+    from storage at 10^7-point scale — on a container where everything is
+    resident in memory.  The async ingest path (``core.ingest``) hides this
+    latency under sketch compute; ``benchmarks/kernels.py`` uses this source
+    for its sync-vs-async overlap rows.
+    """
+    import time
+
+    if seconds < 0:
+        raise ValueError(f"latency must be >= 0, got {seconds}")
+    for batch in source:
+        time.sleep(seconds)
+        yield batch

@@ -3,14 +3,74 @@
 The dry-run lowers against these — weak-type-correct, shardable, and never
 allocated.  Frontend stubs per the assignment: precomputed patch/frame
 embeddings replace the vision/audio towers.
+
+Also home of :class:`SketchJobSpec`, the launchable description of a
+distributed sketch workload (backend x merge topology x ingest mode) —
+drivers (``examples/full_pipeline.py``, benchmarks) build their
+``CKMConfig`` from it so topology/ingest choices are named in one place.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchJobSpec:
+    """How a sketch pass is deployed, independent of what it sketches.
+
+    ``validate()`` fails fast against the live registries (engine backends,
+    ``core.topology``), so a launch config cannot name a topology that does
+    not exist; ``ckm_overrides()`` is the kwargs dict to splat into
+    ``dataclasses.replace(CKMConfig(...), **...)``.
+    """
+
+    backend: str = "xla"
+    reduce_topology: str = "allreduce"
+    ingest: str = "sync"
+    ingest_prefetch: int = 2
+    sketch_quantization: str = "none"
+
+    def validate(self) -> "SketchJobSpec":
+        from repro.core.engine import BACKENDS
+        from repro.core.topology import get_topology
+
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}"
+            )
+        get_topology(self.reduce_topology)
+        if self.ingest not in ("sync", "async"):
+            raise ValueError(
+                f"ingest must be 'sync' or 'async', got {self.ingest!r}"
+            )
+        if self.ingest_prefetch < 1:
+            raise ValueError(
+                f"ingest_prefetch must be >= 1, got {self.ingest_prefetch}"
+            )
+        return self
+
+    def ckm_overrides(self) -> dict:
+        self.validate()
+        return {
+            "sketch_backend": self.backend,
+            "reduce_topology": self.reduce_topology,
+            "ingest": self.ingest,
+            "ingest_prefetch": self.ingest_prefetch,
+            "sketch_quantization": self.sketch_quantization,
+        }
+
+    def describe(self) -> str:
+        return (
+            f"backend={self.backend} topology={self.reduce_topology} "
+            f"ingest={self.ingest}(depth={self.ingest_prefetch}) "
+            f"quantize={self.sketch_quantization}"
+        )
 
 
 def sds(shape, dtype):

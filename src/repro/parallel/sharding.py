@@ -75,6 +75,18 @@ def _axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+def axis_extent(mesh: Mesh, axes) -> int:
+    """Product of the named mesh axes' sizes — the device count a leading
+    data axis is split over.  Shared by the batch/cache spec builders here
+    and the SketchEngine's sharded backend (padding + merge fan-in p, the
+    ``p`` of ``core.topology.wire_cost_model``)."""
+    sizes = _axis_sizes(mesh)
+    ext = 1
+    for a in axes:
+        ext *= sizes[a]
+    return ext
+
+
 def _resolve(spec_tags, shape, mesh, fsdp_axis, stacked: bool):
     """Tags -> PartitionSpec with divisibility guards.  ``stacked``: the leaf
     has a leading layer-group axis (from scan stacking) that stays unsharded."""
@@ -178,9 +190,7 @@ def batch_axes(mesh: Mesh) -> tuple[str, ...]:
 def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
     """Specs for the training/prefill input batch dict."""
     ba = batch_axes(mesh)
-    dp = 1
-    for a in ba:
-        dp *= _axis_sizes(mesh)[a]
+    dp = axis_extent(mesh, ba)
     bspec = ba if shape.global_batch % dp == 0 and shape.global_batch >= dp else None
     specs = {"tokens": P(bspec, None)}
     if shape.kind == "train":
@@ -196,9 +206,7 @@ def cache_specs(cache_shape: Any, cfg: ModelConfig, shape: ShapeConfig, mesh: Me
     """Decode-cache specs: batch over (pod,data) when divisible; KV-cache
     sequence dim over "model" (SP decode); recurrent channels over "model"."""
     ba = batch_axes(mesh)
-    dp = 1
-    for a in ba:
-        dp *= _axis_sizes(mesh)[a]
+    dp = axis_extent(mesh, ba)
     model = _axis_sizes(mesh).get("model", 1)
     b = shape.global_batch
     bspec = ba if b % dp == 0 and b >= dp else None
@@ -255,9 +263,7 @@ def activation_sharder(mesh: Mesh | None, seq_shard: bool = False):
         return lambda x, kind: x
     sizes = _axis_sizes(mesh)
     ba = batch_axes(mesh)
-    dp = 1
-    for a in ba:
-        dp *= sizes[a]
+    dp = axis_extent(mesh, ba)
     model = sizes.get("model", 1)
 
     def shard(x, kind: str):

@@ -15,7 +15,11 @@ from pathlib import Path
 import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
-DOC_FILES = [ROOT / "docs" / "api.md", ROOT / "README.md"]
+DOC_FILES = [
+    ROOT / "docs" / "api.md",
+    ROOT / "docs" / "scaling.md",
+    ROOT / "README.md",
+]
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 
 

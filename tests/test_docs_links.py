@@ -1,0 +1,111 @@
+"""Docs-links check: cross-references resolve, named symbols import.
+
+The docs site promises three kinds of integrity, enforced here in tier-1:
+
+1. every relative markdown link in ``docs/*.md`` + ``README.md`` points at a
+   file that exists, and every ``#anchor`` on such a link (and every
+   ``[[...]]``-style anchor, should one appear) matches a real heading slug
+   in the target file;
+2. every dotted ``repro.*`` name mentioned in backticks imports — module
+   path plus attribute chain — so the docs cannot name a symbol that was
+   renamed away;
+3. every backticked ``CKMConfig.<field>`` is a real config field (the kind
+   of drift PR-sized refactors create).
+"""
+
+import dataclasses
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_WIKILINK = re.compile(r"\[\[([^\]]+)\]\]")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+_REPRO_NAME = re.compile(r"^repro(\.[A-Za-z_]\w*)+$")
+_CFG_FIELD = re.compile(r"^CKMConfig\.(\w+)$")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set[str]:
+    return {_slugify(h) for h in _HEADING.findall(path.read_text())}
+
+
+def _prose(path: Path) -> str:
+    """File text with fenced code blocks removed (snippets are executed by
+    test_docs.py; here we only vet prose-level references)."""
+    return _FENCE.sub("", path.read_text())
+
+
+@pytest.mark.docs
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(path):
+    text = path.read_text()
+    problems = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = (path.parent / ref).resolve() if ref else path
+        if ref and not dest.exists():
+            problems.append(f"{target}: file {ref} missing")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in _anchors(dest):
+            problems.append(f"{target}: no heading for #{anchor} in {dest.name}")
+    for name in _WIKILINK.findall(_prose(path)):
+        slug = _slugify(name)
+        if not any(slug in _anchors(p) for p in DOC_FILES):
+            problems.append(f"[[{name}]]: no heading slug {slug!r} in any doc")
+    assert not problems, f"{path.name}:\n" + "\n".join(problems)
+
+
+def _resolve_dotted(name: str):
+    """Import the longest module prefix, then getattr the rest."""
+    parts = name.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        for attr in parts[cut:]:
+            obj = getattr(obj, attr)  # AttributeError = broken doc reference
+        return obj
+    raise ImportError(f"no importable prefix of {name!r}")
+
+
+@pytest.mark.docs
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_named_public_symbols_exist(path):
+    problems = []
+    spans = set(_CODE_SPAN.findall(_prose(path)))
+    for span in sorted(spans):
+        token = span.strip().rstrip("()")
+        if _REPRO_NAME.match(token):
+            try:
+                _resolve_dotted(token)
+            except (ImportError, AttributeError) as e:
+                problems.append(f"`{span}`: {e}")
+        m = _CFG_FIELD.match(token)
+        if m:
+            from repro.core.ckm import CKMConfig
+
+            fields = {f.name for f in dataclasses.fields(CKMConfig)}
+            if m.group(1) not in fields:
+                problems.append(f"`{span}`: CKMConfig has no field {m.group(1)!r}")
+    assert not problems, f"{path.name}:\n" + "\n".join(problems)
+
+
+def test_docs_corpus_nonempty():
+    assert len(DOC_FILES) >= 4  # architecture, api, scaling, README

@@ -1,0 +1,192 @@
+"""Async ingest: prefetch parity, error propagation, async==sync fits.
+
+The ingest pipeline must be a pure plumbing change: same batches, same order,
+same ops — so the async path's results are *identical* to the sync path's,
+not merely close.  That equality is the acceptance test here (ISSUE 4's
+"async-vs-sync fit_streaming equality").
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ckm as ckm_mod
+from repro.core import engine as eng_mod
+from repro.core import frequencies as fq
+from repro.core import ingest as ing
+from repro.core import quantize as qz
+from repro.data import pipeline as pipe
+
+
+def _blobs(npts=2000, n=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (npts, n)) * 2.0
+    w = fq.draw_frequencies(kw, 40, n, 1.0)
+    return x, w
+
+
+class TestBatchSource:
+    def test_protocol_conformance(self):
+        x, _ = _blobs()
+        assert isinstance(pipe.chunked(x, 128), ing.BatchSource)
+        assert isinstance([x[:10], x[10:]], ing.BatchSource)
+
+        from repro.configs.base import ShapeConfig, get_smoke_config
+        from repro.data.pipeline import DataConfig, SyntheticLM
+
+        src = SyntheticLM(
+            get_smoke_config("llama3.2-1b"),
+            ShapeConfig("t", 16, 8, "train"),
+            DataConfig(seed=0, embed_dim=8),
+        )
+        assert isinstance(src.embedding_stream(0, 2), ing.BatchSource)
+
+    def test_with_latency_passthrough(self):
+        x, _ = _blobs(npts=64)
+        batches = list(pipe.with_latency(pipe.chunked(x, 32), 0.0))
+        assert len(batches) == 2
+        np.testing.assert_array_equal(np.asarray(batches[0]), np.asarray(x[:32]))
+        with pytest.raises(ValueError):
+            next(pipe.with_latency(pipe.chunked(x, 32), -1.0))
+
+
+class TestPrefetched:
+    @pytest.mark.parametrize("prefetch", [1, 2, 5])
+    def test_order_and_content_preserved(self, prefetch):
+        x, _ = _blobs(npts=997)  # ragged tail
+        got = list(ing.prefetched(pipe.chunked(x, 100), prefetch))
+        ref = list(pipe.chunked(x, 100))
+        assert len(got) == len(ref)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+    def test_bad_depth_rejected(self):
+        with pytest.raises(ValueError):
+            list(ing.prefetched([jnp.zeros((2, 2))], prefetch=0))
+
+    def test_source_error_propagates(self):
+        def bad():
+            yield jnp.zeros((4, 2))
+            raise RuntimeError("disk on fire")
+
+        with pytest.raises(RuntimeError, match="disk on fire"):
+            list(ing.prefetched(bad(), 2))
+
+    def test_early_consumer_exit_shuts_producer_down(self):
+        x, _ = _blobs(npts=4000)
+        it = ing.prefetched(pipe.chunked(x, 100), 2)
+        next(it)
+        it.close()  # generator finalizer must stop the worker thread
+
+
+class TestIngestStream:
+    def test_bitwise_equal_to_sync_fold(self):
+        x, w = _blobs(npts=1503)
+        e = eng_mod.SketchEngine(w, "xla", chunk=128)
+        state = e.init_state()
+        for b in pipe.chunked(x, 200):
+            state = e.update(state, b)
+        z_sync = e.finalize(state)
+        a_state, stats = ing.ingest_stream(e, pipe.chunked(x, 200), prefetch=3)
+        z_async = e.finalize(a_state)
+        for zs, za in zip(z_sync, z_async):
+            assert bool(jnp.array_equal(zs, za))
+        assert stats.batches == 8 and stats.points == 1503
+        assert 0.0 <= stats.overlap_efficiency <= 1.0
+
+    def test_quantized_path_bitwise(self):
+        x, w = _blobs(npts=900)
+        q = qz.make_quantizer(jax.random.PRNGKey(4), 40, "1bit")
+        e = eng_mod.SketchEngine(w, "xla", quantizer=q)
+        s_sync = e.init_state()
+        for b in pipe.chunked(x, 128):
+            s_sync = e.update(s_sync, b)
+        s_async, _ = ing.ingest_stream(e, pipe.chunked(x, 128))
+        assert bool(jnp.array_equal(s_sync.qcos_acc, s_async.qcos_acc))
+        assert bool(jnp.array_equal(s_sync.qsin_acc, s_async.qsin_acc))
+
+    def test_resumes_from_existing_state(self):
+        """ingest_stream folds INTO a prior state (fit_streaming's shape:
+        first batch consumed for sigma2, the rest streamed async)."""
+        x, w = _blobs(npts=1000)
+        e = eng_mod.SketchEngine(w, "xla")
+        head = e.update(e.init_state(), x[:300])
+        tail, _ = ing.ingest_stream(e, pipe.chunked(x[300:], 250), state=head)
+        z_split = e.finalize(tail)
+        z_once = e.sketch(x)
+        for zs, zo in zip(z_split, z_once):
+            np.testing.assert_allclose(
+                np.asarray(zs), np.asarray(zo), atol=1e-5
+            )
+
+    def test_donate_preserves_caller_state_and_tolerance(self):
+        """donate=True carries a private copy (the caller's state survives)
+        and stays within float tolerance of the non-donated fold (it fuses
+        update into one jit, which may reassociate — hence opt-in)."""
+        x, w = _blobs(npts=1200)
+        e = eng_mod.SketchEngine(w, "xla")
+        head = e.update(e.init_state(), x[:300])
+        nd, _ = ing.ingest_stream(e, pipe.chunked(x[300:], 300), state=head)
+        d, _ = ing.ingest_stream(
+            e, pipe.chunked(x[300:], 300), state=head, donate=True
+        )
+        # caller's state must still be alive and correct after donation
+        z_head, *_ = e.finalize(head)
+        z_ref, *_ = e.finalize(e.update(e.init_state(), x[:300]))
+        assert bool(jnp.array_equal(z_head, z_ref))
+        for a, b in zip(e.finalize(nd), e.finalize(d)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-5
+            )
+
+    def test_donate_quantized_bitwise(self):
+        """Integer code accumulators are fusion-proof: donate path bitwise."""
+        x, w = _blobs(npts=1000)
+        q = qz.make_quantizer(jax.random.PRNGKey(9), 40, "1bit")
+        e = eng_mod.SketchEngine(w, "xla", quantizer=q)
+        nd, _ = ing.ingest_stream(e, pipe.chunked(x, 250))
+        d, _ = ing.ingest_stream(e, pipe.chunked(x, 250), donate=True)
+        assert bool(jnp.array_equal(nd.qcos_acc, d.qcos_acc))
+        assert bool(jnp.array_equal(nd.qsin_acc, d.qsin_acc))
+
+    def test_engine_sketch_stream_async_flag(self):
+        x, w = _blobs(npts=800)
+        e = eng_mod.SketchEngine(w, "xla")
+        z_s = e.sketch_stream(pipe.chunked(x, 150))
+        z_a = e.sketch_stream(pipe.chunked(x, 150), async_ingest=True)
+        for zs, za in zip(z_s, z_a):
+            assert bool(jnp.array_equal(zs, za))
+
+
+class TestAsyncFitStreaming:
+    def test_async_equals_sync_fit_streaming(self):
+        """Acceptance: same key, same stream -> identical CKMResult arrays."""
+        x, _ = _blobs(npts=3000, n=2, seed=7)
+        cfg = ckm_mod.CKMConfig(
+            k=3, m=60, sigma2=1.0,
+            atom_steps=25, joint_steps=15, nnls_iters=25, final_steps=30,
+        )
+        key = jax.random.PRNGKey(2)
+        res_sync = ckm_mod.fit_streaming(key, pipe.chunked(x, 500), cfg)
+        import dataclasses
+
+        acfg = dataclasses.replace(cfg, ingest="async", ingest_prefetch=3)
+        res_async = ckm_mod.fit_streaming(key, pipe.chunked(x, 500), acfg)
+        assert bool(jnp.array_equal(res_sync.sketch, res_async.sketch))
+        assert bool(
+            jnp.array_equal(res_sync.centroids, res_async.centroids)
+        )
+        assert bool(jnp.array_equal(res_sync.weights, res_async.weights))
+        for a, b in zip(res_sync.bounds, res_async.bounds):
+            assert bool(jnp.array_equal(a, b))
+
+    def test_bad_ingest_mode_rejected(self):
+        x, _ = _blobs(npts=100)
+        cfg = ckm_mod.CKMConfig(k=2, ingest="psychic")
+        with pytest.raises(ValueError, match="ingest"):
+            ckm_mod.fit_streaming(
+                jax.random.PRNGKey(0), pipe.chunked(x, 50), cfg
+            )
