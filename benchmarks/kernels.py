@@ -14,6 +14,12 @@ and the decoder-comparison rows: SSE + decode wall-clock of every registered
 decoder on the fig-1 blobs protocol, from one shared sketch, so
 ``kernels.json`` tracks per-decoder quality/latency across PRs.
 
+Frequency-operator rows (ISSUE 5, ``run_freq_ops``): per-operator sketch
+throughput (dense vs structured fast transform), operator-state /
+spec-wire bytes (the spec-not-matrix acceptance), a roofline cross-check
+of the structured flops model against compiled HLO, and the
+structured-vs-dense SSE acceptance (within 5% on blobs).
+
 Scaling rows (PR 4):
 - ingest: sync vs async ``fit_streaming`` over an I/O-bound blobs stream
   (per-batch latency calibrated to the measured sketch-compute time, the
@@ -262,6 +268,124 @@ def run_ingest(results: dict, n_batches=40, batch=4096, feat=16, m=512, k=3):
     return results
 
 
+def run_freq_ops(results: dict, n_pts=4096, feat=2048, m=2048, sigma2=1.0):
+    """Frequency-operator rows (ISSUE 5): per-operator sketch throughput,
+    state/wire bytes, and the roofline sanity check of the structured path.
+
+    - correctness: the structured fast transform vs the explicit-Hadamard
+      matmul oracle (``kernels.ref.structured_project_ref``);
+    - throughput: warm jitted wall time of the projection (``op.apply``) and
+      of the full engine sketch, per operator, on the real CPU path — the
+      acceptance row is the measured apply speedup at ``n >= 512``
+      (``feat=2048`` here; on CPU the crossover sits near n ~ 2k, on TPU the
+      fused WHT kernel moves it far lower);
+    - state bytes: operator leaves (what a by-value carry ships) and the O(1)
+      ``spec()`` (what engine state/checkpoints/broadcast actually carry)
+      vs the 4·n·m dense matrix — proving the spec-not-matrix acceptance;
+    - roofline: ``utils.roofline.freq_transform_model`` cross-checked
+      against the *compiled* HLO dot-flops of both projections
+      (``utils.hlo.analyze_compiled``), asserting the structured path's
+      arithmetic-intensity model (sub-dense flops, dot-flops ratio within
+      2x of the model's);
+    - quality: structured CKM SSE within 5% of dense on the fig-1 blobs
+      protocol, decoded from the same config/keys.
+    """
+    from repro.core import freq_ops as fo
+    from repro.data import synthetic
+    from repro.utils import hlo as hlo_mod
+    from repro.utils import roofline as roof
+
+    key = jax.random.PRNGKey(21)
+    kx, kf = jax.random.split(key)
+    x = jax.random.normal(kx, (n_pts, feat))
+    ops_by_name = {
+        name: fo.make_operator(name, kf, m, feat, sigma2)
+        for name in fo.available_freq_ops()
+    }
+
+    # Correctness of the fast transform vs an independent dense oracle.
+    s_op = ops_by_name["structured"]
+    sl = 256
+    ref_proj = ref.structured_project_ref(x[:sl], s_op.diags, s_op.radii)[:, :m]
+    got = s_op.apply(x[:sl])
+    rel_err = float(
+        jnp.max(jnp.abs(got - ref_proj)) / jnp.maximum(jnp.max(jnp.abs(ref_proj)), 1e-9)
+    )
+    assert rel_err < 1e-4, rel_err
+
+    dense_matrix_bytes = 4 * feat * m
+    times, flops = {}, {}
+    for name, op in ops_by_name.items():
+        apply_f = jax.jit(lambda xx, o=op: o.apply(xx))
+        jax.block_until_ready(apply_f(x))
+        _, t_apply = timed(apply_f, x)
+        _, t_apply = timed(apply_f, x)  # warm
+        eng = eng_mod.SketchEngine(op, "xla", chunk=n_pts)
+        _, t_sk = timed(eng.sketch, x)
+        _, t_sk = timed(eng.sketch, x)  # warm
+        compiled = apply_f.lower(x).compile()
+        hlo_flops = hlo_mod.analyze_compiled(compiled).flops
+        times[name], flops[name] = t_apply, hlo_flops
+        spec_bytes = fo.spec_wire_bytes(op.spec())
+        results[f"freq_op_{name}"] = {
+            "n_pts": n_pts, "n": feat, "m": m,
+            "apply_seconds": t_apply,
+            "sketch_seconds": t_sk,
+            "points_per_second": n_pts / t_sk,
+            "hlo_dot_flops": hlo_flops,
+            "operator_state_bytes": op.state_bytes(),
+            "spec_wire_bytes": spec_bytes,
+            "dense_matrix_bytes": dense_matrix_bytes,
+        }
+        csv_line(
+            f"freq_op_{name}_N{n_pts}_n{feat}_m{m}", t_sk,
+            f"apply={t_apply*1e3:.0f}ms;state={op.state_bytes()}B;"
+            f"spec={spec_bytes}B",
+        )
+        # Spec-not-matrix acceptance: the rebuild recipe every operator's
+        # checkpoints/broadcast carry is O(1) — negligible next to the matrix.
+        assert spec_bytes < 0.01 * dense_matrix_bytes, (name, spec_bytes)
+
+    # Roofline sanity: model vs compiled-HLO dot flops.
+    model = roof.freq_transform_model(n_pts, feat, m, s_op.d, s_op.nblocks)
+    meas_ratio = flops["dense"] / max(flops["structured"], 1.0)
+    results["freq_op_roofline"] = {
+        **model,
+        "hlo_flops_dense": flops["dense"],
+        "hlo_flops_structured": flops["structured"],
+        "hlo_flops_ratio": meas_ratio,
+        "apply_speedup_structured": times["dense"] / times["structured"],
+    }
+    assert model["structured_flops"] < model["dense_flops"]
+    # The compiled dot-flops must track the analytic model on both sides.
+    assert 0.5 < flops["dense"] / model["dense_flops"] < 2.0, flops
+    assert 0.5 < meas_ratio / model["flops_ratio"] < 2.0, (meas_ratio, model)
+    # Measured throughput acceptance: the fast transform wins at this n.
+    speedup = times["dense"] / times["structured"]
+    results["freq_op_roofline"]["meets_speedup_acceptance"] = bool(speedup > 1.0)
+    csv_line(
+        f"freq_op_speedup_n{feat}", times["structured"],
+        f"x{speedup:.2f};model_flops_x{model['flops_ratio']:.1f};"
+        f"hlo_flops_x{meas_ratio:.1f}",
+    )
+
+    # Quality acceptance: structured CKM SSE within 5% of dense on the
+    # fig-1 blobs protocol (same keys, same decode budget).
+    xb, _, _ = synthetic.gaussian_mixture(
+        jax.random.PRNGKey(11), 8192, k=5, n=4, c=6.0, return_labels=True
+    )
+    sses = {}
+    for name in ops_by_name:
+        cfg = ckm_mod.CKMConfig(k=5, freq_op=name)
+        res = ckm_mod.fit(jax.random.PRNGKey(1), xb, cfg)
+        sses[name] = float(ckm_mod.sse(xb, res.centroids)) / xb.shape[0]
+    rel = sses["structured"] / sses["dense"]
+    results["freq_op_sse"] = {**sses, "structured_vs_dense": rel}
+    csv_line("freq_op_sse_blobs", 0.0, f"ratio={rel:.4f}")
+    assert rel < 1.05, sses
+    return results
+
+
 def run_topologies(results: dict, p=8, n_pts=16384, feat=16, m=1024):
     """Per-topology merge rows: latency of reducing ``p`` quantized partial
     states through every registered schedule, the alpha-beta wire cost model
@@ -381,6 +505,7 @@ def run(full: bool = False):
     run_engine_backends(results)
     run_quantized(results)
     run_decoders(results)
+    run_freq_ops(results)
     run_ingest(results)
     run_topologies(results)
     save("kernels", results)

@@ -6,6 +6,7 @@ through the full distributed pipeline.
                                                     [--decoder clompr|sketch_shift]
                                                     [--topology allreduce|tree|ring]
                                                     [--ingest sync|async]
+                                                    [--freq-op dense|structured]
 
 Stages (all from the library, nothing bespoke):
 1. 8 placeholder devices, (4 data x 2 model) mesh;
@@ -35,11 +36,12 @@ from repro.core import (
     BACKENDS,
     CKMConfig,
     available_decoders,
+    available_freq_ops,
     decode_sketch,
     fit_streaming,
     sse,
 )
-from repro.core import available_topologies, ckm, lloyd
+from repro.core import available_topologies, ckm, freq_ops, lloyd
 from repro.data import pipeline as pipe
 from repro.data import synthetic
 from repro.launch.specs import SketchJobSpec
@@ -71,11 +73,16 @@ def main():
                          "production with sketch compute (core.ingest)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="async ingest queue depth (2 = double buffering)")
+    ap.add_argument("--freq-op", choices=available_freq_ops(), default="dense",
+                    help="frequency operator (core.freq_ops registry): dense "
+                         "= the paper's materialized matrix; structured = "
+                         "stacked fast-transform blocks (O(m·sqrt(d)) "
+                         "projections, O(1) spec on the wire)")
     args = ap.parse_args()
     job = SketchJobSpec(
         backend=args.backend, reduce_topology=args.topology,
         ingest=args.ingest, ingest_prefetch=args.prefetch,
-        sketch_quantization=args.quantize,
+        sketch_quantization=args.quantize, freq_op=args.freq_op,
     ).validate()
 
     key = jax.random.PRNGKey(0)
@@ -90,7 +97,7 @@ def main():
     from repro.core import quantize as qz
 
     sigma2 = fq.estimate_sigma2(kf, x[:2048])
-    freqs = fq.draw_frequencies(kf, m, args.dim, sigma2)
+    freqs = freq_ops.make_operator(args.freq_op, kf, m, args.dim, sigma2)
 
     mesh = None
     xin = x
@@ -109,7 +116,8 @@ def main():
     wire = qz.state_wire_bytes(m, args.n, bits)
     print(
         f"[1] sketch ({job.describe()}): {t_sketch:.2f}s  (m={m}, one pass, "
-        f"merge wire bytes/state={wire})"
+        f"merge wire bytes/state={wire}, operator leaves="
+        f"{freqs.state_bytes()}B vs spec={freq_ops.spec_wire_bytes(freqs.spec())}B)"
     )
 
     t0 = time.perf_counter()

@@ -2,8 +2,9 @@
 
 The paper's pipeline is sketch -> decode; both halves are pluggable
 subsystems (``engine.SketchEngine`` backends/state transforms plus the
-``ingest`` pipeline and ``topology`` merge-schedule registry on the sketch
-side, the ``decoders`` registry on the decode side) behind one config:
+``freq_ops`` frequency-operator registry, the ``ingest`` pipeline and the
+``topology`` merge-schedule registry on the sketch side, the ``decoders``
+registry on the decode side) behind one config:
 
     from repro.core import CKMConfig, fit, sse, predict
 
@@ -32,6 +33,15 @@ from repro.core.decoders import (
     register_decoder,
 )
 from repro.core.engine import BACKENDS, SketchEngine
+from repro.core.freq_ops import (
+    FREQ_OPS,
+    FreqOpSpec,
+    FrequencyOperator,
+    as_operator,
+    available_freq_ops,
+    make_operator,
+    register_freq_op,
+)
 from repro.core.ingest import BatchSource, IngestStats, ingest_stream, prefetched
 from repro.core.topology import (
     TOPOLOGIES,
@@ -61,6 +71,13 @@ __all__ = [
     "register_decoder",
     "BACKENDS",
     "SketchEngine",
+    "FREQ_OPS",
+    "FreqOpSpec",
+    "FrequencyOperator",
+    "as_operator",
+    "available_freq_ops",
+    "make_operator",
+    "register_freq_op",
     "BatchSource",
     "IngestStats",
     "ingest_stream",

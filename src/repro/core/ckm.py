@@ -4,7 +4,9 @@ The pipeline is exactly the paper's four steps:
 
 1. choose a frequency scale sigma^2 on a small fraction of the data
    (``frequencies.estimate_sigma2``),
-2. draw ``m`` frequencies i.i.d. from the adapted-radius distribution,
+2. build the frequency operator for ``m`` frequencies from the adapted-radius
+   distribution (``core.freq_ops``; ``CKMConfig.freq_op`` selects the paper's
+   dense matrix or the structured fast-transform family),
 3. compute the sketch ``z = Sk(X, 1/N)`` (one pass, through the unified
    ``core.engine.SketchEngine`` — xla / pallas / sharded backends; streaming
    via ``fit_streaming``) together with the box bounds ``l, u``,
@@ -39,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import decoders as dec_mod
+from repro.core import freq_ops as fo
 from repro.core import frequencies as freq_mod
 from repro.core import quantize as qz
 from repro.core import sketch as sk
@@ -52,6 +55,16 @@ class CKMConfig:
     m: int | None = None  # sketch size; default m = 10*K*n (paper Fig. 1 uses
     # m = 1000 at K = n = 10; Fig. 2 shows relSSE hits 2.0 already at 5*K*n)
     freq_dist: freq_mod.FreqDist = "adapted_radius"
+    # Frequency operator family (core.freq_ops registry): "dense" draws the
+    # paper's materialized (n, m) matrix; "structured" uses stacked
+    # HD-Rademacher fast-transform blocks with adapted-radius radial
+    # rescaling — O(m·sqrt(d)) projections, O(m) operator state, O(1) spec on
+    # the wire/in checkpoints.  Any registered name is valid end-to-end
+    # (engine backends, decoders, quantization, streaming).
+    freq_op: str = "dense"
+    # Sampling/projection dtype of the frequency operator ("float64" needs
+    # jax.enable_x64); propagated to frequencies.draw_frequencies.
+    freq_dtype: str = "float32"
     replicates: int = 1
     sigma2: float | None = None  # None -> estimate from a data fraction
     sigma2_sample: int = 2048
@@ -144,9 +157,15 @@ class CKMResult(NamedTuple):
     weights: jax.Array  # (K,) — mixture weights alpha, sum to 1
     cost: jax.Array  # sketch-domain objective (4) of the selected replicate
     sigma2: jax.Array
-    frequencies: jax.Array  # (n, m)
+    freq_op: "fo.FrequencyOperator"  # the operator (O(m) state, O(1) spec)
     sketch: jax.Array  # stacked-real (2m,)
     bounds: tuple[jax.Array, jax.Array]
+
+    @property
+    def frequencies(self) -> jax.Array:
+        """Materialised ``(n, m)`` frequency matrix (back-compat, on demand —
+        the result itself carries the operator, not the matrix)."""
+        return self.freq_op.materialize()
 
 
 def make_quantizer(key: jax.Array, cfg: CKMConfig, m: int):
@@ -164,10 +183,10 @@ def make_quantizer(key: jax.Array, cfg: CKMConfig, m: int):
 
 
 def make_engine(
-    w: jax.Array, cfg: CKMConfig, mesh=None, quantizer=None
+    w, cfg: CKMConfig, mesh=None, quantizer=None
 ) -> SketchEngine:
     """The SketchEngine for ``cfg`` — backend, quantization and the merge
-    topology are config flags."""
+    topology are config flags.  ``w``: a frequency operator (or raw matrix)."""
     return SketchEngine(
         w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh,
         quantizer=quantizer, reduce_topology=cfg.reduce_topology,
@@ -175,30 +194,40 @@ def make_engine(
 
 
 def _draw_freqs(key, sample: jax.Array, n: int, cfg: CKMConfig):
-    """Steps 1–2 on a data sample: scale estimation + frequency draw."""
+    """Steps 1–2 on a data sample: scale estimation + operator construction.
+
+    Returns the registered frequency operator ``cfg.freq_op`` (the ``"dense"``
+    builder calls ``frequencies.draw_frequencies`` with the same key — the
+    registry path is bitwise-identical to the historical direct draw).
+    """
     k_sig, k_freq = jax.random.split(key)
     if cfg.sigma2 is None:
         take = min(cfg.sigma2_sample, sample.shape[0])
         sigma2 = freq_mod.estimate_sigma2(k_sig, sample[:take])
     else:
         sigma2 = jnp.asarray(cfg.sigma2, jnp.float32)
-    w = freq_mod.draw_frequencies(k_freq, cfg.sketch_size(n), n, sigma2, cfg.freq_dist)
-    return w, sigma2
+    op = fo.make_operator(
+        cfg.freq_op, k_freq, cfg.sketch_size(n), n, sigma2,
+        dist=cfg.freq_dist, dtype=jnp.dtype(cfg.freq_dtype),
+    )
+    return op, sigma2
 
 
 def compute_sketch(
     key: jax.Array, x: jax.Array, cfg: CKMConfig, mesh=None
 ) -> tuple[jax.Array, jax.Array, jax.Array, tuple[jax.Array, jax.Array]]:
-    """Steps 1–3: scale estimation, frequency draw, one-pass sketch + bounds.
+    """Steps 1–3: scale estimation, operator construction, one-pass sketch.
 
     The sketch pass runs through the unified engine; ``cfg.sketch_backend``
-    selects xla / pallas / sharded (``mesh`` required for sharded).
+    selects xla / pallas / sharded (``mesh`` required for sharded).  The
+    second return value is the frequency *operator* (``core.freq_ops``) —
+    ``op.materialize()`` recovers the dense matrix when needed.
     """
     x = jnp.asarray(x, jnp.float32)
-    w, sigma2 = _draw_freqs(key, x, x.shape[1], cfg)
-    quantizer = make_quantizer(key, cfg, w.shape[1])
-    z, lo, hi = make_engine(w, cfg, mesh, quantizer).sketch(x)
-    return z, w, sigma2, (lo, hi)
+    op, sigma2 = _draw_freqs(key, x, x.shape[1], cfg)
+    quantizer = make_quantizer(key, cfg, op.m)
+    z, lo, hi = make_engine(op, cfg, mesh, quantizer).sketch(x)
+    return z, op, sigma2, (lo, hi)
 
 
 def compute_sketch_streaming(
@@ -220,9 +249,9 @@ def compute_sketch_streaming(
         first = jnp.asarray(next(it), jnp.float32)
     except StopIteration:
         raise ValueError("compute_sketch_streaming needs at least one batch")
-    w, sigma2 = _draw_freqs(key, first, first.shape[1], cfg)
-    quantizer = make_quantizer(key, cfg, w.shape[1])
-    eng = make_engine(w, cfg, mesh, quantizer)
+    op, sigma2 = _draw_freqs(key, first, first.shape[1], cfg)
+    quantizer = make_quantizer(key, cfg, op.m)
+    eng = make_engine(op, cfg, mesh, quantizer)
     state = eng.update(eng.init_state(), first)
     if cfg.ingest == "async":
         # Overlap production/transfer of the remaining batches with sketch
@@ -242,13 +271,13 @@ def compute_sketch_streaming(
             # bounded double buffer (core.ingest) to overlap the two.
             jax.block_until_ready(state)
     z, lo, hi = eng.finalize(state)
-    return z, w, sigma2, (lo, hi), first
+    return z, op, sigma2, (lo, hi), first
 
 
 def decode_sketch(
     key: jax.Array,
     z: jax.Array,
-    w: jax.Array,
+    w,
     lower: jax.Array,
     upper: jax.Array,
     cfg: CKMConfig,
@@ -257,13 +286,16 @@ def decode_sketch(
     """Step 4: decoding via the registered decoder ``cfg.decoder``, with
     replicates selected by the cost (4).
 
-    Replicate r uses ``fold_in(key, r)``, so the replicate-key sequence for
-    R replicates is a prefix of the sequence for R' > R, and replicates run
-    sequentially via ``lax.map`` (the *unbatched* decoder trace — identical
-    numerics to a single run).  Together these make replicate selection
-    monotone for every decoder: more replicates can never return a higher
-    cost (all registry decoders report the same objective (4)).
+    ``w`` is the frequency operator (raw ``(n, m)`` arrays are still accepted
+    through the deprecation shim).  Replicate r uses ``fold_in(key, r)``, so
+    the replicate-key sequence for R replicates is a prefix of the sequence
+    for R' > R, and replicates run sequentially via ``lax.map`` (the
+    *unbatched* decoder trace — identical numerics to a single run).
+    Together these make replicate selection monotone for every decoder: more
+    replicates can never return a higher cost (all registry decoders report
+    the same objective (4)).
     """
+    w = fo.as_operator(w)
     decode = dec_mod.get_decoder(cfg.decoder)
     keys = jnp.stack(
         [jax.random.fold_in(key, r) for r in range(cfg.replicates)]
@@ -285,10 +317,10 @@ def decode_sketch(
 def fit(key: jax.Array, x: jax.Array, cfg: CKMConfig, mesh=None) -> CKMResult:
     """End-to-end compressive K-means on an in-memory dataset."""
     k_sketch, k_dec = jax.random.split(key)
-    z, w, sigma2, (lo, hi) = compute_sketch(k_sketch, x, cfg, mesh)
+    z, op, sigma2, (lo, hi) = compute_sketch(k_sketch, x, cfg, mesh)
     x_init = x if cfg.init in ("sample", "kpp") else None
-    cents, alphas, cost = decode_sketch(k_dec, z, w, lo, hi, cfg, x_init)
-    return CKMResult(cents, alphas, cost, sigma2, w, z, (lo, hi))
+    cents, alphas, cost = decode_sketch(k_dec, z, op, lo, hi, cfg, x_init)
+    return CKMResult(cents, alphas, cost, sigma2, op, z, (lo, hi))
 
 
 def fit_streaming(
@@ -303,12 +335,12 @@ def fit_streaming(
     of the stream is gone by decode time).
     """
     k_sketch, k_dec = jax.random.split(key)
-    z, w, sigma2, (lo, hi), first = compute_sketch_streaming(
+    z, op, sigma2, (lo, hi), first = compute_sketch_streaming(
         k_sketch, batches, cfg, mesh
     )
     x_init = first if cfg.init in ("sample", "kpp") else None
-    cents, alphas, cost = decode_sketch(k_dec, z, w, lo, hi, cfg, x_init)
-    return CKMResult(cents, alphas, cost, sigma2, w, z, (lo, hi))
+    cents, alphas, cost = decode_sketch(k_dec, z, op, lo, hi, cfg, x_init)
+    return CKMResult(cents, alphas, cost, sigma2, op, z, (lo, hi))
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core import freq_ops as fo
 from repro.core import nnls as nnls_mod
 from repro.core import sketch as sk
 from repro.core.decoders.common import adam as _adam
@@ -105,7 +106,7 @@ def _init_s0(key, t, s_buf, mask, x_unit, cfg: CLOMPRConfig, shape):
 
 def _find_atom(key, r, w, lo, span, s_buf, mask, t, x_unit, cfg: CLOMPRConfig):
     """Gradient-ascend the normalised correlation; best of ``atom_restarts``."""
-    m = w.shape[1]
+    m = w.m
     inv_norm = 1.0 / jnp.sqrt(jnp.asarray(m, jnp.float32))
 
     def neg_corr(s):  # s: (R, n) -> scalar (summed; restarts are independent)
@@ -113,7 +114,7 @@ def _find_atom(key, r, w, lo, span, s_buf, mask, t, x_unit, cfg: CLOMPRConfig):
         a = sk.atoms(c, w)  # (R, 2m)
         return -jnp.sum((a @ r) * inv_norm)
 
-    shape = (cfg.atom_restarts, w.shape[0])
+    shape = (cfg.atom_restarts, w.n)
     s0 = _init_s0(key, t, s_buf, mask, x_unit, cfg, shape)
     s_opt = _adam(
         neg_corr, s0, cfg.atom_steps, cfg.atom_lr, lambda p: jnp.clip(p, 0.0, 1.0)
@@ -143,10 +144,13 @@ def clompr(
     Returns ``(centroids (K, n), weights (K,), cost)`` where ``cost`` is the
     final value of the paper's objective (4), used to select among replicates.
     ``x_init`` is only consulted by the non-compressive "sample"/"kpp" init
-    strategies (paper §4.2).
+    strategies (paper §4.2).  ``w`` is a frequency operator (or raw matrix,
+    deprecation shim): atoms and gradients go through ``op.apply``, so the
+    structured fast-transform family decodes unchanged.
     """
-    n = w.shape[0]
-    m = w.shape[1]
+    w = fo.as_operator(w)
+    n = w.n
+    m = w.m
     kp1 = cfg.k + 1
     lo = jnp.asarray(lower, jnp.float32)
     hi = jnp.asarray(upper, jnp.float32)
@@ -180,9 +184,7 @@ def clompr(
                 # Suppress within-resolution duplicates of higher-beta atoms.
                 cents = lo + s_buf * span
                 d2 = jnp.sum((cents[:, None] - cents[None]) ** 2, axis=-1)
-                radius = cfg.merge_radius_scale / jnp.median(
-                    jnp.linalg.norm(w, axis=0)
-                )
+                radius = cfg.merge_radius_scale / jnp.median(w.col_norms())
                 higher = (beta[None, :] > beta[:, None]) | (
                     (beta[None, :] == beta[:, None])
                     & (jnp.arange(kp1)[None, :] < jnp.arange(kp1)[:, None])

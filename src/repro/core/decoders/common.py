@@ -5,6 +5,12 @@ share the same fixed-step projected-Adam loop (moved verbatim from the
 original ``core.clompr`` — CLOMPR's numerics are bitwise-unchanged by the
 refactor) and report the same cost ``||z - A(C) alpha||^2`` for replicate
 selection.
+
+Frequency-operator shim: the helpers take ``w`` as a
+``core.freq_ops.FrequencyOperator`` (costs and radii go through
+``op.apply``/``op.col_norms``, so structured fast-transform operators work
+unchanged).  Raw ``(n, m)`` arrays are still accepted for one deprecation
+release — :func:`ensure_operator` wraps them with a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
@@ -12,7 +18,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import freq_ops as fo
 from repro.core import sketch as sk
+
+
+def ensure_operator(w, caller: str = "decoder helper") -> fo.FrequencyOperator:
+    """Operator pass-through; raw-matrix deprecation shim (warns)."""
+    return fo.as_operator(w, warn_raw=True, caller=caller)
 
 
 def adam(loss_fn, params, steps: int, lr: float, project):
@@ -44,16 +56,18 @@ def adam(loss_fn, params, steps: int, lr: float, project):
     return params
 
 
-def residual_cost(z: jax.Array, centroids: jax.Array, alpha: jax.Array, w: jax.Array) -> jax.Array:
+def residual_cost(z: jax.Array, centroids: jax.Array, alpha: jax.Array, w) -> jax.Array:
     """The shared selection objective: ``||z - sum_k alpha_k A delta_{c_k}||^2``."""
-    r = z - alpha @ sk.atoms(centroids, w)
+    op = ensure_operator(w, "residual_cost")
+    r = z - alpha @ sk.atoms(centroids, op)
     return jnp.sum(r * r)
 
 
-def resolution_radius(w: jax.Array, scale: float) -> jax.Array:
+def resolution_radius(w, scale: float) -> jax.Array:
     """The sketch's spatial resolution: ``scale / median ||omega_j||``.
 
     Centroids closer than this are indistinguishable at the sampled
     frequencies — used by both decoders to suppress duplicate atoms/modes.
     """
-    return scale / jnp.median(jnp.linalg.norm(w, axis=0))
+    op = ensure_operator(w, "resolution_radius")
+    return scale / jnp.median(op.col_norms())

@@ -8,8 +8,11 @@ finalized sketch into centroids:
     decode(key, z, w, lower, upper, cfg, x_init=None)
         -> (centroids (K, n), alphas (K,), cost scalar)
 
-where ``z`` is the stacked-real ``(2m,)`` sketch, ``w: (n, m)`` the frequency
-matrix, ``(lower, upper)`` the box bounds harvested by the engine, ``cfg`` the
+where ``z`` is the stacked-real ``(2m,)`` sketch, ``w`` the frequency
+operator (``core.freq_ops.FrequencyOperator``; raw ``(n, m)`` matrices are
+accepted through the deprecation shim — atoms/costs go through
+``op.apply``/``op.adjoint``, so fast-transform families decode unchanged),
+``(lower, upper)`` the box bounds harvested by the engine, ``cfg`` the
 pipeline config (a ``ckm.CKMConfig``-shaped object — each decoder extracts its
 own static sub-config from it), and ``x_init`` an optional data sample for the
 non-compressive init strategies.  ``cost`` is the sketch-domain objective

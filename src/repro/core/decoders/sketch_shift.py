@@ -47,6 +47,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import freq_ops as fo
 from repro.core import nnls as nnls_mod
 from repro.core import sketch as sk
 from repro.core.decoders import common
@@ -100,7 +101,8 @@ def sketch_shift(
     (optional) seeds the swarm with data rows when ``cfg.init != "range"`` —
     the non-compressive inits of paper §4.2.
     """
-    n, m = w.shape
+    w = fo.as_operator(w)
+    n, m = w.n, w.m
     k = cfg.k
     lo = jnp.asarray(lower, jnp.float32)
     hi = jnp.asarray(upper, jnp.float32)
@@ -108,9 +110,7 @@ def sketch_shift(
 
     # Natural mean-shift step: kappa(d) ~ 1 - ||d||^2 mean||w||^2 / (2n) near
     # 0, i.e. a Gaussian-like kernel of bandwidth h^2 = n / mean_j ||w_j||^2.
-    h2 = cfg.step_scale * n / jnp.maximum(
-        jnp.mean(jnp.sum(w * w, axis=0)), 1e-12
-    )
+    h2 = cfg.step_scale * n / jnp.maximum(jnp.mean(w.col_sq_norms()), 1e-12)
     h = jnp.sqrt(h2)
     radius = common.resolution_radius(w, cfg.dedup_radius_scale)
     x_data = (

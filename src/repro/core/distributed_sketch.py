@@ -53,8 +53,12 @@ def init_state(m: int, n: int) -> SketchState:
 
 
 @jax.jit
-def update(state: SketchState, x: jax.Array, w: jax.Array) -> SketchState:
-    """Fold a batch ``x: (B, n)`` into the accumulator (streaming use)."""
+def update(state: SketchState, x: jax.Array, w) -> SketchState:
+    """Fold a batch ``x: (B, n)`` into the accumulator (streaming use).
+
+    ``w``: a ``core.freq_ops.FrequencyOperator`` or a raw ``(n, m)`` matrix
+    (deprecation shim) — forwarded to ``core.sketch.sketch``.
+    """
     x = jnp.asarray(x, jnp.float32)
     b = x.shape[0]
     # Unnormalised sums: sketch() with unit weights.

@@ -79,6 +79,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import freq_ops as fo
 from repro.core import quantize as qz
 from repro.core import sketch as sk
 from repro.core import topology as topo
@@ -170,7 +171,13 @@ class SketchEngine:
 
     Parameters
     ----------
-    w : (n, m) frequency matrix (``core.frequencies.draw_frequencies``).
+    w : the frequency operator — a ``core.freq_ops.FrequencyOperator``
+        (``freq_ops.make_operator("dense" | "structured", ...)``) or, for one
+        deprecation release, a raw ``(n, m)`` matrix (wrapped in a spec-less
+        dense operator by the shim).  The engine carries the operator's O(m)
+        leaves (dense: the matrix; structured: signs + radii) and exposes
+        ``spec()`` so checkpoints/broadcast can carry the O(1) rebuild recipe
+        instead of any materialised state.
     backend : one of ``BACKENDS`` — see the backend matrix in the module doc.
     chunk : scan chunk for the xla/sharded backends.
     block_n, block_m : Pallas tile sizes (pallas backend).
@@ -207,8 +214,8 @@ class SketchEngine:
         if backend == "sharded" and mesh is None:
             raise ValueError("backend='sharded' requires a mesh")
         topo.get_topology(reduce_topology)  # fail fast on unknown names
-        self.w = jnp.asarray(w, jnp.float32)
-        self.n, self.m = self.w.shape
+        self.freq_op = fo.as_operator(w)
+        self.n, self.m = self.freq_op.n, self.freq_op.m
         self.backend = backend
         self.chunk = chunk
         self.block_n = block_n
@@ -223,6 +230,18 @@ class SketchEngine:
                 f"{(self.m,)}"
             )
         self.quantizer = quantizer
+
+    @property
+    def w(self) -> jax.Array:
+        """Materialised ``(n, m)`` frequency matrix (back-compat; on demand —
+        the engine itself never carries it for non-dense operators)."""
+        return self.freq_op.materialize()
+
+    def spec(self) -> fo.FreqOpSpec:
+        """The operator's O(1) rebuild recipe (``core.freq_ops.FreqOpSpec``)
+        — what checkpoints and cross-host broadcast should carry instead of
+        the O(n·m) matrix; raises for shim-wrapped raw matrices."""
+        return self.freq_op.spec()
 
     # -- monoid ops ---------------------------------------------------------
 
@@ -362,7 +381,7 @@ class SketchEngine:
 
             cos_s, sin_s = ops.fourier_sketch_sums(
                 x,
-                self.w,
+                self.freq_op,
                 weights,
                 block_n=self.block_n,
                 block_m=self.block_m,
@@ -370,7 +389,10 @@ class SketchEngine:
             )
         else:  # xla
             part = sk.sketch(
-                x, self.w, weights=weights, chunk=min(self.chunk, max(x.shape[0], 1))
+                x,
+                self.freq_op,
+                weights=weights,
+                chunk=min(self.chunk, max(x.shape[0], 1)),
             )
             cos_s, sin_s = part[: self.m], -part[self.m :]
         return SketchEngineState(
@@ -391,7 +413,7 @@ class SketchEngine:
 
             qcos, qsin = ops.quantized_fourier_sketch_sums(
                 x,
-                self.w,
+                self.freq_op,
                 q.dither,
                 bits=q.bits,
                 block_n=self.block_n,
@@ -401,7 +423,7 @@ class SketchEngine:
         else:  # xla
             qcos, qsin = sk.sketch_quantized(
                 x,
-                self.w,
+                self.freq_op,
                 q.dither,
                 bits=q.bits,
                 chunk=min(self.chunk, max(x.shape[0], 1)),
@@ -437,10 +459,10 @@ class SketchEngine:
             )
             valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.float32)], axis=0)
 
-        def local(x_shard, w_rep, dither_rep, valid_shard):
+        def local(x_shard, op_rep, dither_rep, valid_shard):
             qcos, qsin = sk.sketch_quantized(
                 x_shard,
-                w_rep,
+                op_rep,
                 dither_rep,
                 valid=valid_shard,
                 bits=q.bits,
@@ -457,6 +479,9 @@ class SketchEngine:
             hi = topo.axis_reduce(jnp.max(x_shard, axis=0), axes, topology, op="max")
             return qcos, qsin, cnt, lo, hi
 
+        # The operator rides shard_map as a replicated pytree: its leaves are
+        # what the broadcast ships — O(m) signs/radii for the structured
+        # family instead of the O(n·m) dense matrix.
         fn = compat.shard_map(
             local,
             mesh=self.mesh,
@@ -464,7 +489,7 @@ class SketchEngine:
             out_specs=(P(), P(), P(), P(), P()),
             check_vma=self._check_vma(),
         )
-        qcos, qsin, cnt, lo, hi = fn(x, self.w, q.dither, valid)
+        qcos, qsin, cnt, lo, hi = fn(x, self.freq_op, q.dither, valid)
         return QuantizedSketchEngineState(
             qcos, qsin, cnt, lo, hi, jnp.asarray(b, jnp.float32)
         )
@@ -488,15 +513,15 @@ class SketchEngine:
                 [weights, jnp.zeros((pad,), jnp.float32)], axis=0
             )
 
-        def local(x_shard, w_rep, wt_shard):
+        def local(x_shard, op_rep, wt_shard):
             part = sk.sketch(
                 x_shard,
-                w_rep,
+                op_rep,
                 weights=wt_shard,
                 chunk=min(chunk, max(x_shard.shape[0], 1)),
                 vary_axes=axes,
             )
-            m = w_rep.shape[1]
+            m = op_rep.m
             cos_s = topo.axis_reduce(part[:m], axes, topology)
             sin_s = topo.axis_reduce(-part[m:], axes, topology)
             wsum = topo.axis_reduce(jnp.sum(wt_shard), axes, topology)
@@ -511,7 +536,7 @@ class SketchEngine:
             out_specs=(P(), P(), P(), P(), P()),
             check_vma=self._check_vma(),
         )
-        cos_s, sin_s, wsum, lo, hi = fn(x, self.w, weights)
+        cos_s, sin_s, wsum, lo, hi = fn(x, self.freq_op, weights)
         return SketchEngineState(
             cos_s, sin_s, wsum, lo, hi, jnp.asarray(b, jnp.float32)
         )

@@ -1,0 +1,42 @@
+"""Pluggable frequency operators (``core.freq_ops``) — see ``base.py``.
+
+Registry + the two built-ins:
+
+- ``"dense"`` — the paper's materialised Ω (bitwise-identical to the
+  pre-refactor dense path through the registry);
+- ``"structured"`` — stacked HD-Rademacher fast-transform blocks with
+  adapted-radius radial rescaling (O(m·sqrt(d)) projections, O(m) state).
+
+Selected end-to-end by ``CKMConfig.freq_op``; docs in
+``docs/architecture.md#frequency-operators`` and ``docs/api.md``.
+"""
+
+from repro.core.freq_ops.base import (
+    FREQ_OPS,
+    FreqOpSpec,
+    FrequencyOperator,
+    as_operator,
+    available_freq_ops,
+    from_spec,
+    get_freq_op,
+    make_operator,
+    register_freq_op,
+    spec_wire_bytes,
+)
+from repro.core.freq_ops.dense import DenseOperator
+from repro.core.freq_ops.structured import StructuredOperator
+
+__all__ = [
+    "FREQ_OPS",
+    "FreqOpSpec",
+    "FrequencyOperator",
+    "DenseOperator",
+    "StructuredOperator",
+    "as_operator",
+    "available_freq_ops",
+    "from_spec",
+    "get_freq_op",
+    "make_operator",
+    "register_freq_op",
+    "spec_wire_bytes",
+]

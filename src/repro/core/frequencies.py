@@ -38,14 +38,22 @@ def _adapted_radius_pdf(r: jax.Array, sigma2: jax.Array) -> jax.Array:
     return jnp.sqrt(r2 + r2 * r2 / 4.0) * jnp.exp(-r2 / 2.0)
 
 
-def _inverse_cdf_sample(key: jax.Array, m: int, sigma2: jax.Array) -> jax.Array:
-    """Draw ``m`` radii from the adapted-radius density by inverse-CDF on a grid."""
+def radius_from_uniform(u: jax.Array, sigma2: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Map uniforms ``u in [0, 1)`` through the adapted-radius inverse CDF.
+
+    The deterministic half of the sampler (grid CDF + linear interpolation),
+    split out so the f32/f64 numerics of the grid accumulation can be compared
+    on identical uniforms (``dtype`` controls the grid/CDF precision).
+    """
+    u = jnp.asarray(u, dtype)
+    sigma2 = jnp.asarray(sigma2, dtype)
     sigma = jnp.sqrt(sigma2)
-    grid = jnp.linspace(0.0, _RMAX_SIGMA / jnp.maximum(sigma, 1e-20), _GRID)
+    grid = jnp.linspace(
+        jnp.asarray(0.0, dtype), _RMAX_SIGMA / jnp.maximum(sigma, 1e-20), _GRID
+    )
     pdf = _adapted_radius_pdf(grid, sigma2)
     cdf = jnp.cumsum(pdf)
     cdf = cdf / cdf[-1]
-    u = jax.random.uniform(key, (m,))
     idx = jnp.searchsorted(cdf, u)
     idx = jnp.clip(idx, 1, _GRID - 1)
     # Linear interpolation between grid points for a smooth sample.
@@ -54,39 +62,77 @@ def _inverse_cdf_sample(key: jax.Array, m: int, sigma2: jax.Array) -> jax.Array:
     return grid[idx - 1] + w * (grid[idx] - grid[idx - 1])
 
 
-def _uniform_sphere(key: jax.Array, m: int, n: int) -> jax.Array:
-    v = jax.random.normal(key, (m, n))
+def _inverse_cdf_sample(
+    key: jax.Array, m: int, sigma2: jax.Array, dtype=jnp.float32
+) -> jax.Array:
+    """Draw ``m`` radii from the adapted-radius density by inverse-CDF on a grid."""
+    return radius_from_uniform(jax.random.uniform(key, (m,)), sigma2, dtype)
+
+
+def _uniform_sphere(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> jax.Array:
+    v = jax.random.normal(key, (m, n), dtype)
     return v / jnp.linalg.norm(v, axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "n", "dist"))
+@functools.partial(jax.jit, static_argnames=("m", "n", "dist", "dtype"))
+def draw_radii(
+    key: jax.Array,
+    m: int,
+    n: int,
+    sigma2: jax.Array | float,
+    dist: FreqDist = "adapted_radius",
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Draw ``m`` frequency *radii* ``||omega||`` from ``Lambda``'s radial law.
+
+    Used by structured frequency operators (``core.freq_ops``), which pick
+    directions by fast orthogonal transforms and only need the radial part of
+    the distribution: adapted-radius (inverse CDF), the chi law of an
+    isotropic Gaussian, or the folded Gaussian.
+    """
+    sigma2 = jnp.asarray(sigma2, dtype)
+    if dist == "adapted_radius":
+        return _inverse_cdf_sample(key, m, sigma2, dtype)
+    if dist == "gaussian":
+        # ||N(0, I_n / sigma2)||: chi_n scaled by 1/sigma.
+        v = jax.random.normal(key, (m, n), dtype)
+        return jnp.linalg.norm(v, axis=1) / jnp.sqrt(sigma2)
+    if dist == "folded_gaussian":
+        return jnp.abs(jax.random.normal(key, (m,), dtype)) / jnp.sqrt(sigma2)
+    raise ValueError(f"unknown frequency distribution {dist!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "dist", "dtype"))
 def draw_frequencies(
     key: jax.Array,
     m: int,
     n: int,
     sigma2: jax.Array | float,
     dist: FreqDist = "adapted_radius",
+    dtype=jnp.float32,
 ) -> jax.Array:
     """Draw ``m`` frequency vectors in R^n from ``Lambda``.
 
     Returns ``W`` with shape ``(n, m)`` (column frequencies), so that the sketch
-    inner products are ``X @ W`` for row-major data ``X: (N, n)``.
+    inner products are ``X @ W`` for row-major data ``X: (N, n)``.  ``dtype``
+    selects the sampling/output precision (default f32; propagated from
+    ``CKMConfig.freq_dtype`` by the pipeline — f64 needs ``jax.enable_x64``).
     """
     kr, kd = jax.random.split(key)
-    sigma2 = jnp.asarray(sigma2, jnp.float32)
+    sigma2 = jnp.asarray(sigma2, dtype)
     if dist == "adapted_radius":
-        radius = _inverse_cdf_sample(kr, m, sigma2)
-        phi = _uniform_sphere(kd, m, n)
+        radius = _inverse_cdf_sample(kr, m, sigma2, dtype)
+        phi = _uniform_sphere(kd, m, n, dtype)
         w = phi * radius[:, None]
     elif dist == "gaussian":
-        w = jax.random.normal(kr, (m, n)) / jnp.sqrt(sigma2)
+        w = jax.random.normal(kr, (m, n), dtype) / jnp.sqrt(sigma2)
     elif dist == "folded_gaussian":
-        radius = jnp.abs(jax.random.normal(kr, (m,))) / jnp.sqrt(sigma2)
-        phi = _uniform_sphere(kd, m, n)
+        radius = jnp.abs(jax.random.normal(kr, (m,), dtype)) / jnp.sqrt(sigma2)
+        phi = _uniform_sphere(kd, m, n, dtype)
         w = phi * radius[:, None]
     else:  # pragma: no cover - static arg
         raise ValueError(f"unknown frequency distribution {dist!r}")
-    return w.T.astype(jnp.float32)  # (n, m)
+    return w.T.astype(dtype)  # (n, m)
 
 
 # ---------------------------------------------------------------------------

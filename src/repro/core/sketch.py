@@ -13,6 +13,12 @@ simpler on reals, and (c) the l2 norm is preserved:  |z_complex|^2 == |z_real|^2
 
 Every atom ``A delta_c`` has constant modulus 1 per frequency, hence constant
 norm ``||A delta_c||_2 = sqrt(m)`` — used by CLOMPR's normalised correlation step.
+
+Frequency-operator contract: every function here takes ``w`` as either a
+``core.freq_ops.FrequencyOperator`` (the registry object — projections via
+``op.apply``, which is a fast transform for the structured family) or, for
+one deprecation release, a raw ``(n, m)`` array (wrapped in a ``"dense"``
+operator by the shim; ``x @ w`` numerics are bitwise-unchanged).
 """
 
 from __future__ import annotations
@@ -22,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import freq_ops as fo
 from repro.utils import compat
 
 __all__ = [
@@ -69,9 +76,10 @@ def sketch(
     ``vary_axes``: when called inside ``shard_map`` on per-device shards, the
     scan carry must be marked as varying over the manual mesh axes.
     """
+    op = fo.as_operator(w)
     x = jnp.asarray(x, jnp.float32)
     n_pts = x.shape[0]
-    m = w.shape[1]
+    m = op.m
     if weights is None:
         weights = jnp.full((n_pts,), 1.0 / n_pts, jnp.float32)
     else:
@@ -87,7 +95,9 @@ def sketch(
 
     def body(acc, inp):
         xc, bc = inp
-        proj = xc @ w  # (chunk, m)
+        # Accumulators are f32 regardless of the operator's sampling dtype
+        # (an f64 operator projects in f64; the cast is a no-op for f32 ops).
+        proj = jnp.asarray(op.apply(xc), jnp.float32)  # (chunk, m)
         c = bc @ jnp.cos(proj)  # (m,)
         s = bc @ jnp.sin(proj)
         return (acc[0] + c, acc[1] + s), None
@@ -120,9 +130,10 @@ def sketch_quantized(
     """
     from repro.core import quantize as qz
 
+    op = fo.as_operator(w)
     x = jnp.asarray(x, jnp.float32)
     n_pts = x.shape[0]
-    m = w.shape[1]
+    m = op.m
     if valid is None:
         valid = jnp.ones((n_pts,), jnp.float32)
     else:
@@ -138,7 +149,8 @@ def sketch_quantized(
 
     def body(acc, inp):
         xc, vc = inp
-        qc, qs = qz.quantize_codes(xc @ w, dither, bits, valid=vc[:, None])
+        proj = jnp.asarray(op.apply(xc), jnp.float32)  # f32 phases (see sketch)
+        qc, qs = qz.quantize_codes(proj, dither, bits, valid=vc[:, None])
         return (acc[0] + jnp.sum(qc, axis=0), acc[1] + jnp.sum(qs, axis=0)), None
 
     acc0 = jnp.zeros((m,), jnp.int32)
@@ -157,13 +169,13 @@ def sketch_complex(
 
 def atom(c: jax.Array, w: jax.Array) -> jax.Array:
     """``A delta_c`` for a single centroid ``c: (n,)`` -> stacked-real ``(2m,)``."""
-    proj = c @ w  # (m,)
+    proj = jnp.asarray(fo.as_operator(w).apply(c), jnp.float32)  # (m,)
     return _stacked(jnp.cos(proj), jnp.sin(proj))
 
 
 def atoms(cs: jax.Array, w: jax.Array) -> jax.Array:
     """``A delta_c`` for centroids ``cs: (S, n)`` -> ``(S, 2m)``."""
-    proj = cs @ w  # (S, m)
+    proj = jnp.asarray(fo.as_operator(w).apply(cs), jnp.float32)  # (S, m)
     return _stacked(jnp.cos(proj), jnp.sin(proj))
 
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import ckm as ckm_mod
 from repro.core import distributed_sketch as ds
+from repro.core import freq_ops as fo
 from repro.core import frequencies as fq
 
 
@@ -67,7 +68,9 @@ class CompressiveBalancer:
     def _draw(self, sigma2: float):
         self.sigma2 = sigma2
         key = jax.random.PRNGKey(self.seed)
-        self.freqs = fq.draw_frequencies(key, self.m_, self.dim, sigma2)
+        # A spec-carrying operator: a worker can broadcast op.spec() (O(1)
+        # bytes) and peers rebuild the identical operator locally.
+        self.freqs = fo.make_operator("dense", key, self.m_, self.dim, sigma2)
 
     def _reservoir_update(self, embeds: np.ndarray):
         for row in embeds:

@@ -1,0 +1,246 @@
+"""Fast structured frequency transform — WHT building block + fused kernels.
+
+The structured frequency operator (``core.freq_ops.structured``) replaces the
+dense ``(n, m)`` frequency matrix with stacked HD-Rademacher blocks: each
+block of ``d = 2^ceil(log2 n)`` frequencies is
+
+    B = c·H D_2 · c·H D_1 · c·H D_0          (c = d^{-1/2}, D_i Rademacher)
+
+— an *exactly orthogonal* direction matrix (product of orthogonal factors)
+whose rows get adapted-radius radial rescaling.  Projecting a point costs
+three Walsh–Hadamard transforms instead of a ``(n, m)`` matvec.
+
+WHT implementation: the Sylvester Hadamard matrix factorises as a Kronecker
+product ``H_d = H_a ⊗ H_b`` (``a·b = d``, ``a, b ~ sqrt(d)``), so the
+transform is two small dense contractions — ``O(d·(a+b)) = O(d^1.5)`` flops
+per vector instead of the dense ``O(d^2)``, and (unlike the ``O(d log d)``
+butterfly, which is a chain of memory-bound shuffles) it maps onto the MXU /
+BLAS.  ``fwht`` is the shared jnp implementation used by the XLA path and by
+the Pallas kernel bodies below.
+
+The fused Pallas kernels mirror ``kernels/fourier_sketch.py``: a grid over
+(frequency blocks, batch tiles) where each tile's projection — here the
+diag/WHT chain instead of an MXU matmul against a dense ``w`` tile — stays in
+VMEM through the trig and the weighted batch reduction, so the ``(N, m)``
+projection never touches HBM.  ``quantized_structured_sketch_kernel`` is the
+QCKM twin (dithered phases -> int32 code sums).  Off-TPU both run in
+``interpret=True`` mode (callers in ``kernels/ops.py`` handle dispatch and
+padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@functools.lru_cache(maxsize=None)
+def _hadamard_np(k: int) -> np.ndarray:
+    """Sylvester Hadamard matrix H_k (entries ±1), k a power of two."""
+    assert k >= 1 and (k & (k - 1)) == 0, k
+    h = np.ones((1, 1), np.float32)
+    while h.shape[0] < k:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def kron_factors(d: int) -> tuple[int, int]:
+    """Balanced Kronecker split ``d = a * b`` with ``a, b`` powers of two."""
+    assert d >= 1 and (d & (d - 1)) == 0, d
+    p = d.bit_length() - 1
+    a = 1 << ((p + 1) // 2)
+    return a, d // a
+
+
+def hadamard(k: int, dtype=jnp.float32) -> jax.Array:
+    """H_k as a jnp array (for the Kronecker-factored transform)."""
+    return jnp.asarray(_hadamard_np(k), dtype)
+
+
+def _kron_wht_2d(v: jax.Array, ha: jax.Array, hb: jax.Array) -> jax.Array:
+    """(rows, d) -> (H_a ⊗ H_b) applied to each row (d = a·b)."""
+    rows = v.shape[0]
+    a, b = ha.shape[0], hb.shape[0]
+    y = jnp.dot(v.reshape(rows * a, b), hb, preferred_element_type=v.dtype)
+    y = jnp.einsum("ij,rjk->rik", ha, y.reshape(rows, a, b))
+    return y.reshape(rows, a * b)
+
+
+def fwht(v: jax.Array) -> jax.Array:
+    """Unnormalised Walsh–Hadamard transform along the last axis.
+
+    ``v: (..., d)`` with ``d`` a power of two; returns ``v @ H_d`` (``H_d``
+    symmetric, so left- and right-application coincide).  Two Kronecker
+    contractions — the XLA reference path of the structured operator.
+    """
+    d = v.shape[-1]
+    if d == 1:
+        return v
+    a, b = kron_factors(d)
+    ha = hadamard(a, v.dtype)
+    hb = hadamard(b, v.dtype)
+    return _kron_wht_2d(v.reshape(-1, d), ha, hb).reshape(v.shape)
+
+
+def hd_chain(xp: jax.Array, diags: jax.Array) -> jax.Array:
+    """The three-stage normalised HD chain of one (or many) blocks.
+
+    ``xp: (..., d)`` zero-padded inputs, ``diags: (..., 3, d)`` Rademacher
+    signs (leading axes broadcast, e.g. ``(nblocks, 3, d)`` against
+    ``(N, 1, d)``).  Returns ``c·H D_2 (c·H D_1 (c·H D_0 xp))`` with
+    ``c = d^{-1/2}`` — unit-norm rows, the direction half of the operator.
+    """
+    d = xp.shape[-1]
+    c = jnp.asarray(d, xp.dtype) ** -0.5
+    v = xp
+    for s in range(3):
+        v = fwht(v * diags[..., s, :]) * c
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _hd_chain_tile(v, dg, ha, hb, d):
+    """In-VMEM HD chain for one (rows, d) tile; dg: (1, 3, d)."""
+    c = jnp.asarray(d, v.dtype) ** -0.5
+    for s in range(3):
+        v = _kron_wht_2d(v * dg[0, s, :][None, :], ha, hb) * c
+    return v
+
+
+def _structured_sketch_kernel(
+    x_ref, dg_ref, r_ref, ha_ref, hb_ref, b_ref, cos_ref, sin_ref
+):
+    """One (bN, d) tile: WHT-chain projection; accumulate weighted cos/sin."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cos_ref[...] = jnp.zeros_like(cos_ref)
+        sin_ref[...] = jnp.zeros_like(sin_ref)
+
+    d = x_ref.shape[-1]
+    v = _hd_chain_tile(x_ref[...], dg_ref[...], ha_ref[...], hb_ref[...], d)
+    proj = v * r_ref[...]  # (bN, d) * (1, d) — radial rescaling
+    beta = b_ref[...]  # (bN, 1)
+    cos_ref[...] += jnp.sum(jnp.cos(proj) * beta, axis=0, keepdims=True)
+    sin_ref[...] += jnp.sum(jnp.sin(proj) * beta, axis=0, keepdims=True)
+
+
+def _quantized_structured_sketch_kernel(
+    x_ref, dg_ref, r_ref, dth_ref, ha_ref, hb_ref, v_ref, qcos_ref, qsin_ref,
+    *, scale,
+):
+    """QCKM twin: dithered WHT-chain phases -> int32 code sums in VMEM."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        qcos_ref[...] = jnp.zeros_like(qcos_ref)
+        qsin_ref[...] = jnp.zeros_like(qsin_ref)
+
+    d = x_ref.shape[-1]
+    v = _hd_chain_tile(x_ref[...], dg_ref[...], ha_ref[...], hb_ref[...], d)
+    theta = v * r_ref[...] + dth_ref[...]
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    if scale == 1:
+        qc = jnp.where(c >= 0, 1, -1)
+        qs = jnp.where(s >= 0, 1, -1)
+    else:
+        qc = jnp.round(c * float(scale)).astype(jnp.int32)
+        qs = jnp.round(s * float(scale)).astype(jnp.int32)
+    valid = v_ref[...].astype(jnp.int32)  # (bN, 1) 0/1 — zero padding rows
+    qcos_ref[...] += jnp.sum(qc.astype(jnp.int32) * valid, axis=0, keepdims=True)
+    qsin_ref[...] += jnp.sum(qs.astype(jnp.int32) * valid, axis=0, keepdims=True)
+
+
+def _specs(nblocks, d, block_n, a, b, extra_freq_rows=0):
+    """Shared in_specs for (x, diags, radii[, dither], ha, hb, per-row)."""
+    specs = [
+        pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, 3, d), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+    ]
+    specs += [pl.BlockSpec((1, d), lambda i, j: (i, 0))] * extra_freq_rows
+    specs += [
+        pl.BlockSpec((a, a), lambda i, j: (0, 0)),
+        pl.BlockSpec((b, b), lambda i, j: (0, 0)),
+        pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+    ]
+    return specs
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def structured_sketch_kernel(
+    x: jax.Array,  # (N, d) f32, zero-padded in both axes
+    diags: jax.Array,  # (nblocks, 3, d)
+    radii: jax.Array,  # (nblocks, d)
+    beta: jax.Array,  # (N, 1)
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw fused launch: inputs must be pre-padded/aligned (see ops.py).
+
+    -> ``(cos_sums, sin_sums)`` of shape ``(nblocks, d)`` (flatten + slice to
+    ``m`` in the caller).  The frequency-block width is ``d`` — the WHT needs
+    the whole block resident, so there is no ``block_m`` knob here.
+    """
+    n_pts, d = x.shape
+    nblocks = diags.shape[0]
+    assert n_pts % block_n == 0, (n_pts, block_n)
+    a, b = kron_factors(d)
+    grid = (nblocks, n_pts // block_n)
+    return pl.pallas_call(
+        _structured_sketch_kernel,
+        grid=grid,
+        in_specs=_specs(nblocks, d, block_n, a, b),
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, d), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, diags, radii, hadamard(a), hadamard(b), beta)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def quantized_structured_sketch_kernel(
+    x: jax.Array,  # (N, d)
+    diags: jax.Array,  # (nblocks, 3, d)
+    radii: jax.Array,  # (nblocks, d)
+    dither: jax.Array,  # (nblocks, d)
+    valid: jax.Array,  # (N, 1)
+    scale: int = 1,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw fused QCKM launch -> int32 ``(qcos, qsin)`` of shape (nblocks, d)."""
+    n_pts, d = x.shape
+    nblocks = diags.shape[0]
+    assert n_pts % block_n == 0, (n_pts, block_n)
+    a, b = kron_factors(d)
+    grid = (nblocks, n_pts // block_n)
+    return pl.pallas_call(
+        functools.partial(_quantized_structured_sketch_kernel, scale=scale),
+        grid=grid,
+        in_specs=_specs(nblocks, d, block_n, a, b, extra_freq_rows=1),
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, d), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, d), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, diags, radii, dither, hadamard(a), hadamard(b), valid)

@@ -19,6 +19,14 @@ container) they run in ``interpret=True`` mode, which executes the kernel body
 in Python for correctness validation.  Padded regions are constructed so they
 cannot perturb results (zero weights / zero valid-masks, +inf distances), and
 outputs are sliced back to logical shapes.
+
+Frequency operators: the sketch-side ops take ``w`` as a
+``core.freq_ops.FrequencyOperator`` (or, deprecation shim, a raw ``(n, m)``
+array).  Dispatch is per family: ``"dense"`` runs the original fused
+matmul+trig kernels (``kernels/fourier_sketch.py``, bitwise-unchanged),
+``"structured"`` runs the fused WHT-chain kernels
+(``kernels/freq_transform.py``), and any user-registered operator falls back
+to the chunked XLA path through ``op.apply`` (correct everywhere, unfused).
 """
 
 from __future__ import annotations
@@ -46,6 +54,19 @@ def _pad_to(a: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array
     return jnp.pad(a, widths, constant_values=value)
 
 
+def _as_op(w):
+    from repro.core import freq_ops
+
+    return freq_ops.as_operator(w)
+
+
+def _structured_pad(x, op, block_n):
+    """Pad a batch for the structured kernels: N to block, n to the WHT width
+    (zero feature columns shift no phases — the operator itself zero-pads)."""
+    x = _pad_to(jnp.asarray(x, jnp.float32), 0, block_n)
+    return _pad_to(x, 1, op.d)[:, : op.d]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
 def fourier_sketch_sums(
     x: jax.Array,
@@ -59,17 +80,43 @@ def fourier_sketch_sums(
 
     The mergeable-state entrypoint used by ``core.engine`` (pallas backend):
     no ``1/N`` normalisation, no stacked-real packaging.  Handles all TPU
-    padding/alignment; off-TPU the kernel runs in interpret mode.
+    padding/alignment; off-TPU the kernels run in interpret mode.  ``w`` is a
+    frequency operator (or raw matrix): dense -> the fused matmul kernel,
+    structured -> the fused WHT-chain kernel, other registered families ->
+    the chunked XLA fallback through ``op.apply``.
     """
+    from repro.core import freq_ops
+    from repro.core import sketch as core_sk
+
     if interpret is None:
         interpret = _on_cpu()
+    op = _as_op(w)
     n_pts = x.shape[0]
-    m = w.shape[1]
+    m = op.m
     x = jnp.asarray(x, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
     beta = jnp.asarray(beta, jnp.float32).reshape(-1, 1)
-
     block_n = min(block_n, max(8, 1 << (n_pts - 1).bit_length()))
+
+    if isinstance(op, freq_ops.StructuredOperator):
+        from repro.kernels import freq_transform as _ft
+
+        xp = _structured_pad(x, op, block_n)
+        beta_p = _pad_to(beta, 0, block_n)  # zero-weight rows are no-ops
+        cos_s, sin_s = _ft.structured_sketch_kernel(
+            xp, jnp.asarray(op.diags, jnp.float32),
+            jnp.asarray(op.radii, jnp.float32), beta_p, block_n=block_n,
+            interpret=interpret,
+        )
+        return cos_s.reshape(-1)[:m], sin_s.reshape(-1)[:m]
+    if not isinstance(op, freq_ops.DenseOperator):
+        # User-registered operator family: no fused kernel — chunked XLA path
+        # through op.apply (same mergeable-sums contract).
+        part = core_sk.sketch(
+            x, op, weights=beta.reshape(-1), chunk=min(8192, max(n_pts, 1))
+        )
+        return part[:m], -part[m:]
+
+    w = jnp.asarray(op.w, jnp.float32)
     block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))
     # Pad: N to block (zero weight rows are no-ops), n to sublane multiple
     # (zero feature columns shift no phases), m to block (sliced off below).
@@ -103,21 +150,48 @@ def quantized_fourier_sketch_sums(
     accumulate integer sums — the XLA twin is ``core.sketch.sketch_quantized``.
     Padding rows carry ``valid=0`` so they contribute zero codes.
     """
+    from repro.core import freq_ops
     from repro.core import quantize as qz
+    from repro.core import sketch as core_sk
     from repro.kernels import fourier_sketch as _qsk
 
     if interpret is None:
         interpret = _on_cpu()
+    op = _as_op(w)
     n_pts = x.shape[0]
-    m = w.shape[1]
+    m = op.m
     x = jnp.asarray(x, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
     if valid is None:
         valid = jnp.ones((n_pts,), jnp.float32)
     valid = jnp.asarray(valid, jnp.float32).reshape(-1, 1)
-    dither = jnp.asarray(dither, jnp.float32).reshape(1, -1)
-
     block_n = min(block_n, max(8, 1 << (n_pts - 1).bit_length()))
+
+    if isinstance(op, freq_ops.StructuredOperator):
+        from repro.kernels import freq_transform as _ft
+
+        xp = _structured_pad(x, op, block_n)
+        valid_p = _pad_to(valid, 0, block_n)  # valid=0 rows -> zero codes
+        # Dither padded to the block tail with zeros (tail codes sliced off).
+        dth = _pad_to(
+            jnp.asarray(dither, jnp.float32).reshape(1, -1), 1,
+            op.nblocks * op.d,
+        ).reshape(op.nblocks, op.d)
+        qcos, qsin = _ft.quantized_structured_sketch_kernel(
+            xp, jnp.asarray(op.diags, jnp.float32),
+            jnp.asarray(op.radii, jnp.float32), dth, valid_p,
+            scale=qz.quantization_scale(bits), block_n=block_n,
+            interpret=interpret,
+        )
+        return qcos.reshape(-1)[:m], qsin.reshape(-1)[:m]
+    if not isinstance(op, freq_ops.DenseOperator):
+        return core_sk.sketch_quantized(
+            x, op, jnp.asarray(dither, jnp.float32),
+            valid=valid.reshape(-1), bits=bits,
+            chunk=min(8192, max(n_pts, 1)),
+        )
+
+    w = jnp.asarray(op.w, jnp.float32)
+    dither = jnp.asarray(dither, jnp.float32).reshape(1, -1)
     block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))
     # Pad: N to block (valid=0 rows contribute zero codes), n to sublane
     # multiple (zero feature columns shift no phases), m to block (sliced off).
@@ -183,27 +257,33 @@ def sketch_shift_scores(
     which is a kernel-density surrogate of the data distribution (``f(c) =
     Σ_l β_l κ(c - x_l)`` with κ the frequency distribution's characteristic
     kernel) — mean-shift iterations ascend it.  ``impl`` selects the same two
-    treatments the sketch side gets: ``"xla"`` (plain fused jnp, runs
-    anywhere — the default) or ``"pallas"`` (the fused VMEM-resident TPU
-    kernel ``kernels.sketch_shift``; interpret mode off-TPU).
+    treatments the sketch side gets: ``"xla"`` (plain fused jnp through the
+    operator's ``apply``/``adjoint`` — a fast transform for the structured
+    family; runs anywhere — the default) or ``"pallas"`` (the fused
+    VMEM-resident TPU kernel ``kernels.sketch_shift``; interpret mode
+    off-TPU; non-dense operators are materialised for this kernel, so prefer
+    ``"xla"`` with the structured family).
     """
     if impl not in ("xla", "pallas"):
         raise ValueError(f"unknown sketch_shift impl {impl!r}")
+    op = _as_op(w)
     c = jnp.asarray(c, jnp.float32)
-    w = jnp.asarray(w, jnp.float32)
     z = jnp.asarray(z, jnp.float32)
-    m = w.shape[1]
+    m = op.m
     z1, z2 = z[:m], z[m:]
     if impl == "xla":
-        proj = c @ w  # (P, m)
+        proj = jnp.asarray(op.apply(c), jnp.float32)  # (P, m)
         cosp, sinp = jnp.cos(proj), jnp.sin(proj)
         f = (cosp @ z1 - sinp @ z2) / m
-        g = ((-sinp) * z1[None, :] - cosp * z2[None, :]) @ w.T / m
+        g = jnp.asarray(
+            op.adjoint((-sinp) * z1[None, :] - cosp * z2[None, :]), jnp.float32
+        ) / m
         return f, g
     if interpret is None:
         interpret = _on_cpu()
     from repro.kernels import sketch_shift as _shift
 
+    w = jnp.asarray(op.materialize(), jnp.float32)
     p_cand, feat = c.shape
     block_p = min(block_p, max(8, 1 << (p_cand - 1).bit_length()))
     block_m = min(block_m, max(128, 1 << (m - 1).bit_length()))

@@ -59,6 +59,37 @@ def sketch_shift_scores_ref(
     return f, g
 
 
+def structured_project_ref(x: jax.Array, diags, radii) -> jax.Array:
+    """Dense-matrix oracle of the structured frequency transform.
+
+    Builds the Sylvester Hadamard matrix *explicitly* (numpy recursion — an
+    implementation independent of the Kronecker-factored ``fwht``) and
+    applies the HD chain as plain matmuls:
+
+        proj = (x_pad D_0 (H/sqrt(d)) D_1 (H/sqrt(d)) D_2 (H/sqrt(d))) * radii
+
+    ``x: (N, n)``; ``diags: (nblocks, 3, d)``; ``radii: (nblocks, d)``.
+    Returns the ``(N, nblocks*d)`` projection (caller slices to m).
+    """
+    import numpy as np
+
+    nblocks, _, d = diags.shape
+    h = np.ones((1, 1), np.float64)
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    hn = jnp.asarray(h / np.sqrt(d), jnp.float32)
+    xp = jnp.pad(
+        x.astype(jnp.float32), ((0, 0), (0, d - x.shape[1]))
+    )
+    outs = []
+    for bidx in range(nblocks):
+        v = xp
+        for s in range(3):
+            v = (v * diags[bidx, s][None, :]) @ hn
+        outs.append(v * radii[bidx][None, :])
+    return jnp.concatenate(outs, axis=-1)
+
+
 def assign_argmin_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(assignment (N,) i32, min squared distance (N,) f32) — full matrix."""
     x = x.astype(jnp.float32)

@@ -35,9 +35,13 @@ class SketchJobSpec:
     ingest: str = "sync"
     ingest_prefetch: int = 2
     sketch_quantization: str = "none"
+    # Frequency-operator family (core.freq_ops registry): "dense" |
+    # "structured" | any registered name.
+    freq_op: str = "dense"
 
     def validate(self) -> "SketchJobSpec":
         from repro.core.engine import BACKENDS
+        from repro.core.freq_ops import get_freq_op
         from repro.core.topology import get_topology
 
         if self.backend not in BACKENDS:
@@ -45,6 +49,7 @@ class SketchJobSpec:
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
             )
         get_topology(self.reduce_topology)
+        get_freq_op(self.freq_op)
         if self.ingest not in ("sync", "async"):
             raise ValueError(
                 f"ingest must be 'sync' or 'async', got {self.ingest!r}"
@@ -63,13 +68,14 @@ class SketchJobSpec:
             "ingest": self.ingest,
             "ingest_prefetch": self.ingest_prefetch,
             "sketch_quantization": self.sketch_quantization,
+            "freq_op": self.freq_op,
         }
 
     def describe(self) -> str:
         return (
             f"backend={self.backend} topology={self.reduce_topology} "
             f"ingest={self.ingest}(depth={self.ingest_prefetch}) "
-            f"quantize={self.sketch_quantization}"
+            f"quantize={self.sketch_quantization} freq_op={self.freq_op}"
         )
 
 

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import ckm as ckm_mod
 from repro.core import distributed_sketch as ds
-from repro.core import frequencies as fq
+from repro.core import freq_ops as fo
 
 
 @dataclasses.dataclass
@@ -34,8 +34,10 @@ class ActivationMonitor:
 
     def __post_init__(self):
         self.m_ = self.m or 4 * self.k * self.dim
-        self.freqs = fq.draw_frequencies(
-            jax.random.PRNGKey(self.seed), self.m_, self.dim, self.sigma2
+        # Spec-carrying operator: checkpoints/peers need only op.spec().
+        self.freqs = fo.make_operator(
+            "dense", jax.random.PRNGKey(self.seed), self.m_, self.dim,
+            self.sigma2,
         )
 
     def init_state(self) -> ds.SketchState:

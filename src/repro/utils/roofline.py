@@ -138,6 +138,38 @@ def analyze(compiled, chips: int, model_flops: float) -> Roofline:
     )
 
 
+def freq_transform_model(
+    n_pts: int, n: int, m: int, d: int, nblocks: int
+) -> dict:
+    """Flops/bytes/arithmetic-intensity model of the two frequency operators.
+
+    Dense projection: one ``(N, n) @ (n, m)`` matmul — ``2·N·n·m`` flops
+    moving ``4·(N·n + n·m + N·m)`` bytes.  Structured projection: per block,
+    three Kronecker-factored WHTs (``H_d = H_a ⊗ H_b``; two dense
+    contractions of ``2·N·d·(a+b)`` flops each) plus the diagonal and radial
+    elementwise stages — ``O(N·m·sqrt(d))`` total, moving only
+    ``4·(N·d + O(m) operator leaves + N·m)`` bytes.  The flops here count
+    dot-issued work only (matching ``utils.hlo.analyze_compiled``'s cost
+    model, which is how the benchmark cross-checks this model against the
+    compiled HLO); elementwise trig/diagonals are excluded on both sides.
+    """
+    a = 1 << (((d.bit_length() - 1) + 1) // 2) if d > 1 else 1
+    b = max(d // a, 1)
+    dense_flops = 2.0 * n_pts * n * m
+    structured_flops = 3.0 * nblocks * 2.0 * n_pts * d * (a + b)
+    dense_bytes = 4.0 * (n_pts * n + n * m + n_pts * m)
+    structured_bytes = 4.0 * (n_pts * d + 4 * nblocks * d + n_pts * m)
+    return {
+        "dense_flops": dense_flops,
+        "structured_flops": structured_flops,
+        "flops_ratio": dense_flops / max(structured_flops, 1.0),
+        "dense_bytes": dense_bytes,
+        "structured_bytes": structured_bytes,
+        "dense_intensity": dense_flops / dense_bytes,
+        "structured_intensity": structured_flops / structured_bytes,
+    }
+
+
 def train_model_flops(param_count: int, tokens: int) -> float:
     """6 N D (N = active params)."""
     return 6.0 * param_count * tokens

@@ -195,11 +195,15 @@ class TestStreamingCKM:
         x, _, _ = gaussian_blobs
         cfg = ckm_mod.CKMConfig(k=5, sigma2=1.0, sigma2_sample=1000)
         key = jax.random.PRNGKey(9)
-        z_mem, w_mem, _, (lo_m, hi_m) = ckm_mod.compute_sketch(key, x, cfg)
-        z_st, w_st, _, (lo_s, hi_s), _ = ckm_mod.compute_sketch_streaming(
+        z_mem, op_mem, _, (lo_m, hi_m) = ckm_mod.compute_sketch(key, x, cfg)
+        z_st, op_st, _, (lo_s, hi_s), _ = ckm_mod.compute_sketch_streaming(
             key, pipe.chunked(x, 1000), cfg
         )
-        np.testing.assert_allclose(np.asarray(w_st), np.asarray(w_mem))
+        # Same key -> the same operator spec (and hence identical frequencies).
+        assert op_st.spec() == op_mem.spec()
+        np.testing.assert_allclose(
+            np.asarray(op_st.materialize()), np.asarray(op_mem.materialize())
+        )
         np.testing.assert_allclose(np.asarray(z_st), np.asarray(z_mem), atol=1e-4)
         np.testing.assert_allclose(np.asarray(lo_s), np.asarray(lo_m), atol=1e-6)
         np.testing.assert_allclose(np.asarray(hi_s), np.asarray(hi_m), atol=1e-6)
