@@ -14,6 +14,10 @@ and the decoder-comparison rows: SSE + decode wall-clock of every registered
 decoder on the fig-1 blobs protocol, from one shared sketch, so
 ``kernels.json`` tracks per-decoder quality/latency across PRs.
 
+SSE-vs-m frontier rows (ISSUE 6, ``run_amp``): amp vs clompr vs sketch_shift
+fits at m = {2, 4, 10}·K·n on blobs, best-of-3 replicates — the CL-AMP
+acceptance is ``amp`` at 4·K·n within 5% of CLOMPR at 10·K·n.
+
 Frequency-operator rows (ISSUE 5, ``run_freq_ops``): per-operator sketch
 throughput (dense vs structured fast transform), operator-state /
 spec-wire bytes (the spec-not-matrix acceptance), a roofline cross-check
@@ -45,6 +49,7 @@ from benchmarks.common import csv_line, save, timed
 from repro.core import available_decoders, available_topologies
 from repro.core import ckm as ckm_mod
 from repro.core import engine as eng_mod
+from repro.core import freq_ops as fo
 from repro.core import ingest as ingest_mod
 from repro.core import quantize as qz
 from repro.core import sketch as core_sk
@@ -176,6 +181,53 @@ def run_decoders(results: dict, n_pts=8192, k=5, feat=4):
     rel = sses["sketch_shift"] / sses["clompr"]
     results["decoder_sketch_shift"]["sse_vs_clompr"] = rel
     assert rel < 1.10, sses
+    return results
+
+
+def run_amp(results: dict, n_pts=8000, k=5, feat=4):
+    """SSE-vs-m frontier per decoder (ISSUE 6): amp vs clompr vs sketch_shift
+    on the blobs protocol at m = {2, 4, 10}·K·n, best-of-3 replicates each
+    (CL-AMP's own protocol — random restarts selected by the shared
+    sketch-domain cost).  The acceptance pins the tentpole claim: ``amp`` at
+    m = 4·K·n lands within 5% of CLOMPR's SSE at m = 10·K·n — message
+    passing stays accurate at sketch sizes where greedy decoding degrades.
+    """
+    from repro.data import synthetic
+
+    x, _, _ = synthetic.gaussian_mixture(
+        jax.random.PRNGKey(42), n_pts, k=k, n=feat, c=6.0, return_labels=True
+    )
+    kn = k * feat
+    frontier = {}
+    for mult in (2, 4, 10):
+        m = mult * kn
+        for name in ("amp", "clompr", "sketch_shift"):
+            cfg = ckm_mod.CKMConfig(k=k, m=m, decoder=name, replicates=3)
+
+            def run_fit():
+                return ckm_mod.fit(jax.random.PRNGKey(0), x, cfg)
+
+            res, _ = timed(run_fit)
+            res, t = timed(run_fit)  # warm (jit cached)
+            sse_val = float(ckm_mod.sse(x, res.centroids)) / n_pts
+            frontier[(name, mult)] = sse_val
+            results[f"frontier_{name}_m{mult}kn"] = {
+                "decoder": name,
+                "m": m,
+                "m_over_kn": mult,
+                "replicates": 3,
+                "sse_per_n": sse_val,
+                "sketch_cost": float(res.cost),
+                "fit_seconds": t,
+            }
+            csv_line(
+                f"frontier_{name}_m{m}_N{n_pts}_K{k}",
+                t,
+                f"sse_per_n={sse_val:.4f}",
+            )
+    rel = frontier[("amp", 4)] / frontier[("clompr", 10)]
+    results["frontier_amp_m4kn"]["sse_vs_clompr_10kn"] = rel
+    assert rel <= 1.05, frontier
     return results
 
 
@@ -459,7 +511,8 @@ def run(full: bool = False):
         beta = jnp.full((n_pts,), 1.0 / n_pts)
         # interpret-mode equivalence on a slice (full interpret is slow)
         sl = slice(0, min(n_pts, 2048))
-        zk = ops.fourier_sketch(x[sl], w, beta[sl] * (n_pts / 2048),
+        w_op = fo.as_operator(w)  # kernel wrappers reject raw matrices (PR 6)
+        zk = ops.fourier_sketch(x[sl], w_op, beta[sl] * (n_pts / 2048),
                                 interpret=True, block_n=256, block_m=256)
         ck, sk_ = ref.fourier_sketch_ref(x[sl], w, beta[sl] * (n_pts / 2048))
         err = float(jnp.max(jnp.abs(zk - jnp.concatenate([ck, -sk_]))))
@@ -505,6 +558,7 @@ def run(full: bool = False):
     run_engine_backends(results)
     run_quantized(results)
     run_decoders(results)
+    run_amp(results)
     run_freq_ops(results)
     run_ingest(results)
     run_topologies(results)

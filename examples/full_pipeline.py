@@ -3,7 +3,7 @@ through the full distributed pipeline.
 
     PYTHONPATH=src python examples/full_pipeline.py [--n 1000000]
                                                     [--backend sharded|xla|pallas]
-                                                    [--decoder clompr|sketch_shift]
+                                                    [--decoder clompr|sketch_shift|amp]
                                                     [--topology allreduce|tree|ring]
                                                     [--ingest sync|async]
                                                     [--freq-op dense|structured]
@@ -14,8 +14,8 @@ Stages (all from the library, nothing bespoke):
    backend is a flag: "sharded" (shard_map + psum-merge over the data axis,
    O(m) cross-device traffic), "xla" (chunked scan) or "pallas" (fused
    kernel; interpret mode off-TPU);
-3. a registered decoder ("clompr" or "sketch_shift", the --decoder flag)
-   decodes K centroids from the sketch alone;
+3. a registered decoder ("clompr", "sketch_shift" or "amp", the --decoder
+   flag) decodes K centroids from the sketch alone;
 4. a second, *streaming* CKM fit consumes the same data as a chunked
    iterator (fit_streaming) — out-of-core one-pass path;
 5. Lloyd-Max x5 runs on the gathered data as the reference;
@@ -56,7 +56,9 @@ def main():
     ap.add_argument("--decoder", choices=available_decoders(), default="clompr",
                     help="sketch decoder (core.decoders registry): clompr = "
                          "paper Algorithm 1; sketch_shift = mean shift on the "
-                         "sketched characteristic function")
+                         "sketched characteristic function; amp = CL-AMP "
+                         "joint message passing (accurate at small m; pair "
+                         "with --replicates-style restarts via CKMConfig)")
     ap.add_argument("--stream-chunk", type=int, default=0,
                     help="also run the one-pass streaming fit at this chunk "
                          "size (0 = skip)")
@@ -83,6 +85,7 @@ def main():
         backend=args.backend, reduce_topology=args.topology,
         ingest=args.ingest, ingest_prefetch=args.prefetch,
         sketch_quantization=args.quantize, freq_op=args.freq_op,
+        decoder=args.decoder,
     ).validate()
 
     key = jax.random.PRNGKey(0)
@@ -91,7 +94,7 @@ def main():
         kd, args.n, args.k, args.dim, return_labels=True
     )
 
-    cfg = CKMConfig(k=args.k, decoder=args.decoder, **job.ckm_overrides())
+    cfg = CKMConfig(k=args.k, **job.ckm_overrides())
     m = cfg.sketch_size(args.dim)
     from repro.core import frequencies as fq
     from repro.core import quantize as qz

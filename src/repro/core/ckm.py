@@ -45,7 +45,7 @@ from repro.core import freq_ops as fo
 from repro.core import frequencies as freq_mod
 from repro.core import quantize as qz
 from repro.core import sketch as sk
-from repro.core.decoders import CLOMPRConfig, SketchShiftConfig
+from repro.core.decoders import AMPConfig, CLOMPRConfig, SketchShiftConfig
 from repro.core.engine import SketchEngine
 
 
@@ -101,8 +101,9 @@ class CKMConfig:
     # backend; on "sharded" the cross-device merge psums integer accumulators.
     sketch_quantization: str = "none"
     # Sketch decoder: any name in the registry (core.decoders) — "clompr"
-    # (paper Algorithm 1) or "sketch_shift" (mean-shift on the sketched
-    # characteristic function).  Replicate selection, quantized sketches and
+    # (paper Algorithm 1), "sketch_shift" (mean-shift on the sketched
+    # characteristic function) or "amp" (CL-AMP joint message passing,
+    # accurate at small m).  Replicate selection, quantized sketches and
     # fit/fit_streaming work identically for every decoder.
     decoder: str = "clompr"
     # sketch_shift decoder knobs (ignored by "clompr"); nnls_iters and init
@@ -119,6 +120,12 @@ class CKMConfig:
     # against re-picking leftover residue of an already-kept mode, and a
     # larger radius would forbid genuinely overlapping clusters.
     shift_dedup_scale: float = 1.0
+    # amp (CL-AMP) decoder knobs (ignored by the other decoders); nnls_iters,
+    # joint_lr and init above are shared.
+    amp_iters: int = 300  # GAMP iterations
+    amp_damp: float = 0.3  # damping on the message updates (1 = undamped)
+    amp_polish_steps: int = 600  # joint (C, alpha) Adam after the loop
+    amp_impl: str = "xla"  # amp_denoise kernel impl: "xla" | "pallas"
 
     def sketch_size(self, n: int) -> int:
         return self.m if self.m is not None else 10 * self.k * n
@@ -135,6 +142,18 @@ class CKMConfig:
             init=self.init,
             dedup_radius_scale=self.shift_dedup_scale,
             impl=self.shift_impl,
+        )
+
+    def amp_config(self) -> AMPConfig:
+        return AMPConfig(
+            k=self.k,
+            iters=self.amp_iters,
+            damp=self.amp_damp,
+            nnls_iters=self.nnls_iters,
+            polish_steps=self.amp_polish_steps,
+            polish_lr=self.joint_lr,
+            init=self.init,
+            impl=self.amp_impl,
         )
 
     def clompr_config(self) -> CLOMPRConfig:
@@ -168,18 +187,32 @@ class CKMResult(NamedTuple):
         return self.freq_op.materialize()
 
 
+def stream_keys(key: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The sketch pass's three PRNG streams: ``(sigma2, frequencies, dither)``.
+
+    One ``split`` fan-out from the parent key — the single derivation point
+    shared by :func:`_draw_freqs` and :func:`make_quantizer`.  (The dither
+    stream used to be ``fold_in(key, 0x51)`` while sigma2/frequencies came
+    from ``split(key)`` of the *same* parent — two derivation schemes applied
+    to one key, with no independence guarantee between them.)  Because every
+    stream has its own branch, enabling quantization still does not perturb
+    the frequency/sigma2 draws: a quantized run sees the same frequencies as
+    its float twin under the same key.
+    """
+    k_sig, k_freq, k_dither = jax.random.split(key, 3)
+    return k_sig, k_freq, k_dither
+
+
 def make_quantizer(key: jax.Array, cfg: CKMConfig, m: int):
     """The sketch quantizer for ``cfg`` (or None for the float path).
 
-    The dither key is derived by ``fold_in`` so enabling quantization does not
-    perturb the frequency/sigma2 draws — a quantized run sees the *same*
-    frequencies as its float twin under the same key.
+    Draws only from the dither branch of :func:`stream_keys`, so the float
+    and quantized pipelines share frequencies under the same parent key.
     """
     if cfg.sketch_quantization == "none":
         return None
-    return qz.make_quantizer(
-        jax.random.fold_in(key, 0x51), m, cfg.sketch_quantization
-    )
+    _, _, k_dither = stream_keys(key)
+    return qz.make_quantizer(k_dither, m, cfg.sketch_quantization)
 
 
 def make_engine(
@@ -198,9 +231,10 @@ def _draw_freqs(key, sample: jax.Array, n: int, cfg: CKMConfig):
 
     Returns the registered frequency operator ``cfg.freq_op`` (the ``"dense"``
     builder calls ``frequencies.draw_frequencies`` with the same key — the
-    registry path is bitwise-identical to the historical direct draw).
+    registry path is bitwise-identical to the historical direct draw).  The
+    sigma2/frequency keys come from the shared :func:`stream_keys` fan-out.
     """
-    k_sig, k_freq = jax.random.split(key)
+    k_sig, k_freq, _ = stream_keys(key)
     if cfg.sigma2 is None:
         take = min(cfg.sigma2_sample, sample.shape[0])
         sigma2 = freq_mod.estimate_sigma2(k_sig, sample[:take])

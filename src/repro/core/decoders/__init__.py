@@ -1,12 +1,13 @@
 """Pluggable sketch decoders — the decode half of sketch -> decode.
 
 Mirrors the engine subsystem on the other side of the pipeline: a ``Decoder``
-protocol + registry (``registry.py``), with two built-ins registered on
+protocol + registry (``registry.py``), with three built-ins registered on
 import — ``"clompr"`` (paper Algorithm 1, numerics bitwise-identical to the
-pre-registry ``core.clompr``) and ``"sketch_shift"`` (mean-shift on the
-sketched characteristic function).  Select end-to-end with
-``CKMConfig(decoder=...)``; see the Decoders section of
-``docs/architecture.md`` for the contract and when to pick which.
+pre-registry ``core.clompr``), ``"sketch_shift"`` (mean-shift on the
+sketched characteristic function) and ``"amp"`` (CL-AMP: joint approximate
+message passing, accurate at sketch sizes where the greedy decoders degrade).
+Select end-to-end with ``CKMConfig(decoder=...)``; see the Decoders section
+of ``docs/architecture.md`` for the contract and when to pick which.
 """
 
 from repro.core.decoders.registry import (
@@ -18,6 +19,7 @@ from repro.core.decoders.registry import (
 )
 
 # Importing the built-in decoder modules registers them.
+from repro.core.decoders.amp import AMPConfig, cl_amp
 from repro.core.decoders.clompr import CLOMPRConfig, clompr
 from repro.core.decoders.sketch_shift import SketchShiftConfig, sketch_shift
 
@@ -27,6 +29,8 @@ __all__ = [
     "available_decoders",
     "get_decoder",
     "register_decoder",
+    "AMPConfig",
+    "cl_amp",
     "CLOMPRConfig",
     "clompr",
     "SketchShiftConfig",

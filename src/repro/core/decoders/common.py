@@ -1,16 +1,16 @@
 """Shared decoder machinery: projected Adam + the sketch-domain objective.
 
-Both built-in decoders optimise inside one ``jit`` with fixed shapes, so they
+The built-in decoders optimise inside one ``jit`` with fixed shapes, so they
 share the same fixed-step projected-Adam loop (moved verbatim from the
 original ``core.clompr`` — CLOMPR's numerics are bitwise-unchanged by the
 refactor) and report the same cost ``||z - A(C) alpha||^2`` for replicate
 selection.
 
-Frequency-operator shim: the helpers take ``w`` as a
-``core.freq_ops.FrequencyOperator`` (costs and radii go through
-``op.apply``/``op.col_norms``, so structured fast-transform operators work
-unchanged).  Raw ``(n, m)`` arrays are still accepted for one deprecation
-release — :func:`ensure_operator` wraps them with a ``DeprecationWarning``.
+The helpers take ``w`` as a ``core.freq_ops.FrequencyOperator`` (costs and
+radii go through ``op.apply``/``op.col_norms``, so structured fast-transform
+operators work unchanged).  The raw ``(n, m)`` deprecation window closed in
+PR 6: :func:`ensure_operator` now raises ``TypeError`` on a plain array —
+wrap with ``freq_ops.as_operator(w)`` at the boundary instead.
 """
 
 from __future__ import annotations
@@ -23,8 +23,14 @@ from repro.core import sketch as sk
 
 
 def ensure_operator(w, caller: str = "decoder helper") -> fo.FrequencyOperator:
-    """Operator pass-through; raw-matrix deprecation shim (warns)."""
-    return fo.as_operator(w, warn_raw=True, caller=caller)
+    """Operator pass-through; raw arrays raise (deprecation window closed)."""
+    if not isinstance(w, fo.FrequencyOperator):
+        raise TypeError(
+            f"{caller} requires a core.freq_ops.FrequencyOperator; raw "
+            "(n, m) frequency arrays were removed after their one-release "
+            "deprecation window (PR 5) — wrap with freq_ops.as_operator(w)"
+        )
+    return w
 
 
 def adam(loss_fn, params, steps: int, lr: float, project):

@@ -9,9 +9,9 @@ finalized sketch into centroids:
         -> (centroids (K, n), alphas (K,), cost scalar)
 
 where ``z`` is the stacked-real ``(2m,)`` sketch, ``w`` the frequency
-operator (``core.freq_ops.FrequencyOperator``; raw ``(n, m)`` matrices are
-accepted through the deprecation shim — atoms/costs go through
-``op.apply``/``op.adjoint``, so fast-transform families decode unchanged),
+operator (``core.freq_ops.FrequencyOperator`` — atoms/costs go through
+``op.apply``/``op.adjoint``, so fast-transform families decode unchanged;
+wrap a raw ``(n, m)`` matrix with ``freq_ops.as_operator`` first),
 ``(lower, upper)`` the box bounds harvested by the engine, ``cfg`` the
 pipeline config (a ``ckm.CKMConfig``-shaped object — each decoder extracts its
 own static sub-config from it), and ``x_init`` an optional data sample for the
@@ -29,10 +29,12 @@ Registering a decoder::
     def my_decoder(key, z, w, lower, upper, cfg, x_init=None):
         ...
 
-Built-ins: ``"clompr"`` (the paper's Algorithm 1, moved here unchanged) and
+Built-ins: ``"clompr"`` (the paper's Algorithm 1, moved here unchanged),
 ``"sketch_shift"`` (mean-shift iterations on the sketched characteristic
-function, Belhadji & Gribonval 2023).  Selection is a config flag:
-``CKMConfig(decoder="sketch_shift")``.
+function, Belhadji & Gribonval 2023) and ``"amp"`` (CL-AMP: joint hybrid
+approximate message passing, Byrne et al. 2017 — accurate down to
+m ~ 2-4 K n where the greedy decoders need ~10 K n).  Selection is a config
+flag: ``CKMConfig(decoder="amp")``.
 """
 
 from __future__ import annotations

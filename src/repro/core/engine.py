@@ -151,8 +151,13 @@ def _merge_states(a, b):
 
 @jax.jit
 def _finalize_state(state: SketchEngineState):
+    # An empty stream (or an all-zero-weight shard) has nothing to average:
+    # return the zero sketch rather than accumulator/denom garbage.  The tiny
+    # denom floor alone is not enough — cos_acc can be exactly 0 while a
+    # negative-weight cancellation leaves weight_sum at -0.0 or ~1e-38.
     denom = jnp.maximum(state.weight_sum, 1e-30)
     z = jnp.concatenate([state.cos_acc, -state.sin_acc]) / denom
+    z = jnp.where(state.weight_sum > 0, z, jnp.zeros_like(z))
     return z, state.lower, state.upper
 
 
@@ -163,6 +168,9 @@ def _finalize_quantized(state: QuantizedSketchEngineState, dither, bits: int):
     )
     denom = jnp.maximum(state.weight_sum, 1e-30)
     z = jnp.concatenate([cos_acc, -sin_acc]) / denom
+    # Same zero-weight guard as the float path: an empty quantized stream
+    # must finalize to the zero sketch, never to code-sum / denom garbage.
+    z = jnp.where(state.weight_sum > 0, z, jnp.zeros_like(z))
     return z, state.lower, state.upper
 
 
@@ -172,9 +180,9 @@ class SketchEngine:
     Parameters
     ----------
     w : the frequency operator — a ``core.freq_ops.FrequencyOperator``
-        (``freq_ops.make_operator("dense" | "structured", ...)``) or, for one
-        deprecation release, a raw ``(n, m)`` matrix (wrapped in a spec-less
-        dense operator by the shim).  The engine carries the operator's O(m)
+        (``freq_ops.make_operator("dense" | "structured", ...)``); a raw
+        ``(n, m)`` matrix is also accepted here for convenience (wrapped in a
+        spec-less dense operator).  The engine carries the operator's O(m)
         leaves (dense: the matrix; structured: signs + radii) and exposes
         ``spec()`` so checkpoints/broadcast can carry the O(1) rebuild recipe
         instead of any materialised state.

@@ -23,16 +23,15 @@ determines the operator, so engine state, checkpoints and cross-host
 broadcast can carry ~O(1) bytes (``spec_wire_bytes``) and rebuild the
 operator with :func:`from_spec` instead of shipping the O(n·m) matrix.
 
-Deprecation shim: every public entry point that used to take a raw ``(n, m)``
-array still does — :func:`as_operator` wraps it in a ``"dense"`` operator
-(such a wrapper has no spec; ``spec()`` raises).  Decoder helpers emit a
-``DeprecationWarning`` on the raw path (``warn_raw=True``); the raw path is
-kept for one release.
+Raw arrays: :func:`as_operator` wraps a raw ``(n, m)`` array in a ``"dense"``
+operator (such a wrapper has no spec; ``spec()`` raises).  The sketch/engine
+entry points still wrap silently for convenience, but the decoder helpers and
+kernel wrappers closed their one-release deprecation window in PR 6 and now
+raise ``TypeError`` on raw arrays — wrap explicitly at the boundary.
 """
 
 from __future__ import annotations
 
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -248,26 +247,18 @@ def from_spec(spec: FreqOpSpec) -> FrequencyOperator:
     )
 
 
-def as_operator(
-    w, *, warn_raw: bool = False, caller: str = "this function"
-) -> FrequencyOperator:
-    """The deprecation shim: pass operators through, wrap raw ``(n, m)`` arrays.
+def as_operator(w) -> FrequencyOperator:
+    """Pass operators through; wrap raw ``(n, m)`` arrays in a dense operator.
 
     A wrapped raw matrix behaves exactly like the dense operator it is
-    (``apply`` is the same ``x @ w``) but carries no spec.  With
-    ``warn_raw=True`` (the decoder helpers) the raw path emits a
-    ``DeprecationWarning``; it is kept working for one release.
+    (``apply`` is the same ``x @ w``) but carries no spec.  This is the
+    *explicit* wrapping entry point — the decoder helpers and kernel wrappers
+    no longer accept raw matrices themselves (their one-release deprecation
+    window closed in PR 6; they raise ``TypeError``), so call this at the
+    boundary when you hold a plain array.
     """
     if isinstance(w, FrequencyOperator):
         return w
-    if warn_raw:
-        warnings.warn(
-            f"passing a raw (n, m) frequency array to {caller} is deprecated; "
-            "pass a core.freq_ops.FrequencyOperator (e.g. "
-            "freq_ops.make_operator('dense', ...) or freq_ops.as_operator(w))",
-            DeprecationWarning,
-            stacklevel=3,
-        )
     from repro.core.freq_ops.dense import DenseOperator
 
     return DenseOperator(jnp.asarray(w))

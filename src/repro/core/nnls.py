@@ -31,7 +31,9 @@ def nnls(
     mask: (s,)    — True for active columns
     """
     maskf = mask.astype(a.dtype)
-    a = a * maskf[None, :]  # dead columns contribute nothing
+    # Zero out dead columns with a select, not a multiply: padded columns may
+    # hold NaN/inf, and 0 * NaN = NaN would poison the gram matrix.
+    a = jnp.where(maskf[None, :] > 0, a, 0.0)
     gram = a.T @ a  # (s, s) — s is small (<= 2K), cheap & reused every step
     atz = a.T @ z
 
@@ -42,8 +44,12 @@ def nnls(
 
     v0 = jnp.ones((a.shape[1],), a.dtype) / jnp.sqrt(a.shape[1])
     v, _ = jax.lax.scan(pw, v0, None, length=power_iters)
-    lam = jnp.maximum(v @ (gram @ v), 1e-12)
-    step = 1.0 / (2.0 * lam)
+    lam = v @ (gram @ v)
+    # Empty support (all columns masked) or an all-zero atom matrix gives
+    # gram = 0 and a Rayleigh quotient of ~0; the old 1e-12 floor turned that
+    # into a ~5e11 step size and NaN iterates.  The fixed point is beta = 0
+    # regardless, so freeze the iteration with a zero step instead.
+    step = jnp.where(lam > 1e-12, 1.0 / (2.0 * jnp.maximum(lam, 1e-12)), 0.0)
 
     def body(carry, _):
         beta, y, t = carry

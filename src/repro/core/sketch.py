@@ -16,9 +16,10 @@ norm ``||A delta_c||_2 = sqrt(m)`` — used by CLOMPR's normalised correlation s
 
 Frequency-operator contract: every function here takes ``w`` as either a
 ``core.freq_ops.FrequencyOperator`` (the registry object — projections via
-``op.apply``, which is a fast transform for the structured family) or, for
-one deprecation release, a raw ``(n, m)`` array (wrapped in a ``"dense"``
-operator by the shim; ``x @ w`` numerics are bitwise-unchanged).
+``op.apply``, which is a fast transform for the structured family) or a raw
+``(n, m)`` array, wrapped silently in a ``"dense"`` operator for convenience
+(``x @ w`` numerics are bitwise-unchanged).  The decoder helpers and kernel
+wrappers are stricter — they raise ``TypeError`` on raw arrays (PR 6).
 """
 
 from __future__ import annotations

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused truncated-Gaussian posterior denoiser (CL-AMP).
+
+The input channel of the CL-AMP decoder (``core.decoders.amp``) updates all K
+centroid estimates at once: each pseudo-data entry ``r_kl`` with pseudo
+-variance ``q`` is combined with the uniform box prior ``[lower_l, upper_l]``,
+giving the truncated-normal posterior whose mean/variance drive the next GAMP
+iteration.  The whole update is elementwise over the ``(K, n)`` estimate
+matrix, so one VPU pass computes both moments in place — the unfused XLA path
+materialises the five intermediate ``(K, n)`` arrays (a, b, Z, and the two
+pdf terms) in HBM between elementwise ops; here only ``r`` and the two output
+moments move.
+
+Numerics (shared *exactly* with ``ops.amp_denoise``'s XLA path and mirrored
+by the ``kernels.ref.amp_denoise_ref`` oracle):
+
+    a = (lo - r)/sig,  b = (hi - r)/sig,       sig = sqrt(q)
+    Z = Phi(b) - Phi(a)                        (Phi via erf)
+    mean = r + sig (phi(a) - phi(b)) / Z
+    var  = q [1 + (a phi(a) - b phi(b))/Z - ((phi(a) - phi(b))/Z)^2]
+
+with the hardened edge cases: infinite box edges contribute zero boundary
+terms (``a * phi(a)`` would be ``inf * 0``), and ``Z < 1e-12`` (pseudo-data
+far outside the box — the regime a diverging AMP iterate visits) collapses
+the posterior to the nearest box edge with a small residual variance instead
+of 0/0 NaNs.
+
+Grid: ``(k_blocks,)`` over rows of the estimate matrix; every block is
+``(block_k, n)`` with the bounds/variance broadcast as ``(1, n)`` rows.  TPU
+alignment: callers (ops.py) pad K to the block size and n to the lane width
+(128) with benign values (r=0, lo=-1, hi=1, q=1); padded cells are sliced off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INV_SQRT2 = 0.7071067811865476
+_INV_SQRT2PI = 0.3989422804014327
+
+
+def _denoise_kernel(r_ref, q_ref, lo_ref, hi_ref, mean_ref, var_ref):
+    """One (bK, n) tile: both truncated-normal moments in a single VPU pass."""
+    r = r_ref[...]
+    q = q_ref[...]  # (1, n), already clamped positive by the wrapper
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    sig = jnp.sqrt(q)
+    a = (lo - r) / sig
+    b = (hi - r) / sig
+    pa = _INV_SQRT2PI * jnp.exp(-0.5 * a * a)
+    pb = _INV_SQRT2PI * jnp.exp(-0.5 * b * b)
+    # Phi(b) - Phi(a), tail-stable: erfc keeps relative precision deep in
+    # either tail where erf rounds to +-1 (Phi(b) - Phi(a) == Phi(-a) -
+    # Phi(-b); the where picks the branch whose erfc arguments are positive).
+    z_mass = 0.5 * jnp.where(
+        a + b > 0,
+        jax.lax.erfc(a * _INV_SQRT2) - jax.lax.erfc(b * _INV_SQRT2),
+        jax.lax.erfc(-b * _INV_SQRT2) - jax.lax.erfc(-a * _INV_SQRT2),
+    )
+    z_mass = jnp.maximum(z_mass, 1e-30)
+    inside = z_mass > 1e-12
+    # Infinite box edges: the boundary terms t*phi(t) vanish (inf * 0 guard).
+    apa = jnp.where(jnp.isfinite(a), a * pa, 0.0)
+    bpb = jnp.where(jnp.isfinite(b), b * pb, 0.0)
+    frac = (pa - pb) / z_mass
+    mean = r + sig * frac
+    var = q * (1.0 + (apa - bpb) / z_mass - frac * frac)
+    mean = jnp.where(inside, mean, jnp.clip(r, lo, hi))
+    var = jnp.where(inside, var, q * 1e-6)
+    mean_ref[...] = jnp.clip(mean, lo, hi)
+    var_ref[...] = jnp.clip(var, q * 1e-12, q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def amp_denoise_kernel(
+    r: jax.Array,
+    q: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw kernel launch: inputs must be pre-padded/aligned (see ops.py).
+
+    r: (K, n) f32; q/lo/hi: (1, n) f32 -> (mean (K, n), var (K, n)) f32.
+    """
+    k_est, feat = r.shape
+    assert k_est % block_k == 0, (k_est, block_k)
+    grid = (k_est // block_k,)
+    return pl.pallas_call(
+        _denoise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, feat), lambda i: (i, 0)),
+            pl.BlockSpec((1, feat), lambda i: (0, 0)),
+            pl.BlockSpec((1, feat), lambda i: (0, 0)),
+            pl.BlockSpec((1, feat), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_k, feat), lambda i: (i, 0)),
+            pl.BlockSpec((block_k, feat), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_est, feat), jnp.float32),
+            jax.ShapeDtypeStruct((k_est, feat), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, q, lo, hi)

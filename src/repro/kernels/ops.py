@@ -10,6 +10,9 @@ Entry points
   function, the inner score/shift step of the ``sketch_shift`` decoder
   (``core.decoders.sketch_shift``); ``impl="xla" | "pallas"`` mirrors the
   sketch side's backend treatment;
+- ``amp_denoise`` — truncated-Gaussian posterior moments over K centroid
+  estimates, the input-channel denoiser of the ``amp`` decoder
+  (``core.decoders.amp``); same ``impl="xla" | "pallas"`` dispatch;
 - ``flash_attention`` — fused attention forward for the serving path;
 - ``assign_argmin`` — fused nearest-centroid assignment.
 
@@ -21,8 +24,9 @@ cannot perturb results (zero weights / zero valid-masks, +inf distances), and
 outputs are sliced back to logical shapes.
 
 Frequency operators: the sketch-side ops take ``w`` as a
-``core.freq_ops.FrequencyOperator`` (or, deprecation shim, a raw ``(n, m)``
-array).  Dispatch is per family: ``"dense"`` runs the original fused
+``core.freq_ops.FrequencyOperator``; raw ``(n, m)`` arrays are a
+``TypeError`` since the one-release deprecation window closed (wrap with
+``freq_ops.as_operator``).  Dispatch is per family: ``"dense"`` runs the original fused
 matmul+trig kernels (``kernels/fourier_sketch.py``, bitwise-unchanged),
 ``"structured"`` runs the fused WHT-chain kernels
 (``kernels/freq_transform.py``), and any user-registered operator falls back
@@ -57,7 +61,15 @@ def _pad_to(a: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array
 def _as_op(w):
     from repro.core import freq_ops
 
-    return freq_ops.as_operator(w)
+    if not isinstance(w, freq_ops.FrequencyOperator):
+        raise TypeError(
+            "kernels.ops sketch-side entry points require a "
+            "core.freq_ops.FrequencyOperator; the raw (n, m) array path was "
+            "removed after its one-release deprecation window (PR 5) — wrap "
+            "with freq_ops.as_operator(w) or build one via "
+            "freq_ops.make_operator(...)"
+        )
+    return w
 
 
 def _structured_pad(x, op, block_n):
@@ -300,6 +312,84 @@ def sketch_shift_scores(
         interpret=interpret,
     )
     return f_sums[:p_cand, 0] / m, g_sums[:p_cand, :feat] / m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("impl", "block_k", "interpret")
+)
+def amp_denoise(
+    r: jax.Array,
+    q: jax.Array,
+    lower: jax.Array,
+    upper: jax.Array,
+    impl: str = "xla",
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Truncated-Gaussian posterior denoiser over K centroid estimates.
+
+    The input channel of the CL-AMP decoder (``core.decoders.amp``): for the
+    pseudo-data matrix ``r: (K, n)`` with scalar pseudo-variance ``q`` and the
+    engine's box bounds ``lower/upper: (n,)``, returns the posterior
+    ``(mean (K, n), variance (K, n))`` of each coordinate under a uniform box
+    prior — the truncated-normal moments.  ``impl`` selects the same two
+    treatments the other decoder ops get: ``"xla"`` (plain fused jnp; runs
+    anywhere — the default) or ``"pallas"`` (the single-VPU-pass kernel
+    ``kernels.amp_denoise``; interpret mode off-TPU).  Hardened edge cases
+    (identical across impls and the ``ref.py`` oracle): infinite box edges
+    contribute zero boundary terms, and vanishing in-box mass (pseudo-data
+    far outside the box) collapses to the nearest edge instead of NaN.
+    """
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown amp_denoise impl {impl!r}")
+    r = jnp.asarray(r, jnp.float32)
+    k_est, feat = r.shape
+    q = jnp.maximum(jnp.asarray(q, jnp.float32).reshape(()), 1e-20)
+    lo = jnp.broadcast_to(jnp.asarray(lower, jnp.float32), (feat,))
+    hi = jnp.broadcast_to(jnp.asarray(upper, jnp.float32), (feat,))
+    if impl == "xla":
+        sig = jnp.sqrt(q)
+        a = (lo[None, :] - r) / sig
+        b = (hi[None, :] - r) / sig
+        inv_sqrt2pi = 0.3989422804014327
+        pa = inv_sqrt2pi * jnp.exp(-0.5 * a * a)
+        pb = inv_sqrt2pi * jnp.exp(-0.5 * b * b)
+        # Tail-stable Phi(b) - Phi(a) via erfc (see kernels/amp_denoise.py).
+        inv_sqrt2 = 0.7071067811865476
+        z_mass = 0.5 * jnp.where(
+            a + b > 0,
+            jax.lax.erfc(a * inv_sqrt2) - jax.lax.erfc(b * inv_sqrt2),
+            jax.lax.erfc(-b * inv_sqrt2) - jax.lax.erfc(-a * inv_sqrt2),
+        )
+        z_mass = jnp.maximum(z_mass, 1e-30)
+        inside = z_mass > 1e-12
+        apa = jnp.where(jnp.isfinite(a), a * pa, 0.0)
+        bpb = jnp.where(jnp.isfinite(b), b * pb, 0.0)
+        frac = (pa - pb) / z_mass
+        mean = r + sig * frac
+        var = q * (1.0 + (apa - bpb) / z_mass - frac * frac)
+        mean = jnp.where(inside, mean, jnp.clip(r, lo[None, :], hi[None, :]))
+        var = jnp.where(inside, var, q * 1e-6)
+        return (
+            jnp.clip(mean, lo[None, :], hi[None, :]),
+            jnp.clip(var, q * 1e-12, q),
+        )
+    if interpret is None:
+        interpret = _on_cpu()
+    from repro.kernels import amp_denoise as _amp
+
+    block_k = min(block_k, max(8, 1 << (k_est - 1).bit_length()))
+    # Pad: K to block (garbage rows sliced off), n to the lane width with
+    # benign cells (r=0 inside a [-1, 1] box at unit variance cannot produce
+    # non-finite intermediates).
+    r_p = _pad_to(_pad_to(r, 0, block_k), 1, 128)
+    q_p = jnp.broadcast_to(q, (1, r_p.shape[1]))
+    lo_p = _pad_to(lo.reshape(1, -1), 1, 128, value=-1.0)
+    hi_p = _pad_to(hi.reshape(1, -1), 1, 128, value=1.0)
+    mean, var = _amp.amp_denoise_kernel(
+        r_p, q_p, lo_p, hi_p, block_k=block_k, interpret=interpret
+    )
+    return mean[:k_est, :feat], var[:k_est, :feat]
 
 
 @functools.partial(

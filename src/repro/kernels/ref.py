@@ -90,6 +90,50 @@ def structured_project_ref(x: jax.Array, diags, radii) -> jax.Array:
     return jnp.concatenate(outs, axis=-1)
 
 
+def amp_denoise_ref(
+    r: jax.Array, q: jax.Array, lower: jax.Array, upper: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Truncated-Gaussian posterior moments — the ``ops.amp_denoise`` oracle.
+
+    Input-channel denoiser of the CL-AMP decoder: for each pseudo-data entry
+    ``r`` with pseudo-variance ``q``, the posterior of a coordinate with a
+    uniform box prior on ``[lower, upper]`` is ``N(r, q)`` truncated to the
+    box.  Returns its (mean, variance) via the standard normal-CDF formulas
+    (``jax.scipy.special.ndtr`` — implementation-independent of the erf-based
+    kernel).  Edge cases mirrored exactly by kernel and XLA paths: infinite
+    box edges contribute zero boundary terms, and when the Gaussian mass in
+    the box underflows (``Z < 1e-12``, pseudo-data far outside the box) the
+    posterior collapses to the nearest edge with a small residual variance.
+
+    r: (K, n); q: scalar; lower/upper: (n,).  -> ((K, n) mean, (K, n) var).
+    """
+    from jax.scipy.special import ndtr
+
+    r = r.astype(jnp.float32)
+    q = jnp.maximum(jnp.asarray(q, jnp.float32), 1e-20)
+    lo = jnp.broadcast_to(lower.astype(jnp.float32), r.shape)
+    hi = jnp.broadcast_to(upper.astype(jnp.float32), r.shape)
+    sig = jnp.sqrt(q)
+    a = (lo - r) / sig
+    b = (hi - r) / sig
+    phi = lambda t: jnp.exp(-0.5 * t * t) / jnp.sqrt(2.0 * jnp.pi)  # noqa: E731
+    pa, pb = phi(a), phi(b)
+    bound = lambda t, pt: jnp.where(jnp.isfinite(t), t * pt, 0.0)  # noqa: E731
+    # Phi(b) - Phi(a), tail-stable: evaluated through the CDF of whichever
+    # tail the interval sits in (Phi(b) - Phi(a) == Phi(-a) - Phi(-b)), so
+    # the mass survives in float32 far from the mean instead of rounding to
+    # 1 - 1 = 0.
+    z_mass = jnp.where(a + b > 0, ndtr(-a) - ndtr(-b), ndtr(b) - ndtr(a))
+    z_mass = jnp.maximum(z_mass, 1e-30)
+    inside = z_mass > 1e-12
+    mean = r + sig * (pa - pb) / z_mass
+    frac = (pa - pb) / z_mass
+    var = q * (1.0 + (bound(a, pa) - bound(b, pb)) / z_mass - frac * frac)
+    mean = jnp.where(inside, mean, jnp.clip(r, lo, hi))
+    var = jnp.where(inside, var, q * 1e-6)
+    return jnp.clip(mean, lo, hi), jnp.clip(var, q * 1e-12, q)
+
+
 def assign_argmin_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(assignment (N,) i32, min squared distance (N,) f32) — full matrix."""
     x = x.astype(jnp.float32)

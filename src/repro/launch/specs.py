@@ -38,8 +38,12 @@ class SketchJobSpec:
     # Frequency-operator family (core.freq_ops registry): "dense" |
     # "structured" | any registered name.
     freq_op: str = "dense"
+    # Sketch decoder (core.decoders registry): "clompr" | "sketch_shift" |
+    # "amp" | any registered name.
+    decoder: str = "clompr"
 
     def validate(self) -> "SketchJobSpec":
+        from repro.core.decoders import get_decoder
         from repro.core.engine import BACKENDS
         from repro.core.freq_ops import get_freq_op
         from repro.core.topology import get_topology
@@ -50,6 +54,7 @@ class SketchJobSpec:
             )
         get_topology(self.reduce_topology)
         get_freq_op(self.freq_op)
+        get_decoder(self.decoder)
         if self.ingest not in ("sync", "async"):
             raise ValueError(
                 f"ingest must be 'sync' or 'async', got {self.ingest!r}"
@@ -69,13 +74,15 @@ class SketchJobSpec:
             "ingest_prefetch": self.ingest_prefetch,
             "sketch_quantization": self.sketch_quantization,
             "freq_op": self.freq_op,
+            "decoder": self.decoder,
         }
 
     def describe(self) -> str:
         return (
             f"backend={self.backend} topology={self.reduce_topology} "
             f"ingest={self.ingest}(depth={self.ingest_prefetch}) "
-            f"quantize={self.sketch_quantization} freq_op={self.freq_op}"
+            f"quantize={self.sketch_quantization} freq_op={self.freq_op} "
+            f"decoder={self.decoder}"
         )
 
 

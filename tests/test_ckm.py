@@ -40,9 +40,15 @@ class TestCKMRecovery:
         assert np.all(w >= 0) and abs(w.sum() - 1.0) < 1e-5
 
     def test_sse_close_to_lloyd(self, gaussian_blobs):
-        """Paper's headline: CKM SSE comparable to Lloyd-Max (rel < 1.5)."""
+        """Paper's headline: CKM SSE comparable to Lloyd-Max (rel < 1.5).
+
+        Best-of-3 on both sides: single-replicate CKM is at the mercy of the
+        frequency draw (~1-in-7 seeds miss a cluster), and the paper's own
+        protocol is best-of-replicates — mirror the Lloyd baseline below."""
         x, _, _ = gaussian_blobs
-        res = ckm_mod.fit(jax.random.PRNGKey(2), x, ckm_mod.CKMConfig(k=5))
+        res = ckm_mod.fit(
+            jax.random.PRNGKey(2), x, ckm_mod.CKMConfig(k=5, replicates=3)
+        )
         km = lloyd_mod.kmeans(
             jax.random.PRNGKey(3), x, lloyd_mod.LloydConfig(k=5, replicates=3)
         )
@@ -149,3 +155,61 @@ class TestNNLS:
         z = rng.normal(size=30).astype(np.float32)
         beta = nnls_mod.nnls(jnp.asarray(a), jnp.asarray(z), jnp.ones((5,), bool))
         assert np.all(np.asarray(beta) >= 0)
+
+    def test_empty_support_returns_zero(self):
+        """Regression (PR 6): with every column masked the gram matrix is 0,
+        the power-iteration Rayleigh quotient hits its floor, and the old
+        1/(2*1e-12) step produced inf/NaN iterates.  The answer is beta = 0."""
+        rng = np.random.default_rng(3)
+        a = rng.normal(size=(20, 6)).astype(np.float32)
+        z = rng.normal(size=20).astype(np.float32)
+        beta = nnls_mod.nnls(
+            jnp.asarray(a), jnp.asarray(z), jnp.zeros((6,), bool)
+        )
+        np.testing.assert_array_equal(np.asarray(beta), np.zeros(6, np.float32))
+
+    def test_nan_padding_in_masked_columns_is_ignored(self):
+        """Regression (PR 6): decoders keep padded supports — masked columns
+        can hold NaN/inf.  The old `a * mask` produced 0 * NaN = NaN grams;
+        the select-based masking must give the same answer as clean padding."""
+        rng = np.random.default_rng(4)
+        a = rng.normal(size=(20, 6)).astype(np.float32)
+        z = (a[:, [0, 2, 3, 5]] @ np.abs(rng.normal(size=4))).astype(np.float32)
+        mask = jnp.asarray([True, False, True, True, False, True])
+        a_nan = a.copy()
+        a_nan[:, 1] = np.nan
+        a_nan[:, 4] = np.inf
+        beta_clean = nnls_mod.nnls(jnp.asarray(a), jnp.asarray(z), mask)
+        beta_nan = nnls_mod.nnls(jnp.asarray(a_nan), jnp.asarray(z), mask)
+        assert np.all(np.isfinite(np.asarray(beta_nan)))
+        np.testing.assert_allclose(
+            np.asarray(beta_nan), np.asarray(beta_clean), atol=1e-6
+        )
+
+
+class TestPRNGStreams:
+    def test_streams_pairwise_distinct(self):
+        """Regression (PR 6): the signature/frequency/dither streams must come
+        from one split fan-out — pairwise-distinct keys for any fixed seed.
+        (Previously the dither stream was fold_in(key, 0x51) on the *parent*
+        key while sig/freq came from split(key) of the same parent, so the
+        derivations were not a single coherent fan-out.)"""
+        for seed in (0, 1, 42, 2**31 - 1):
+            keys = ckm_mod.stream_keys(jax.random.PRNGKey(seed))
+            data = [np.asarray(jax.random.key_data(k)) for k in keys]
+            assert len(keys) == 3
+            for i in range(3):
+                for j in range(i + 1, 3):
+                    assert not np.array_equal(data[i], data[j]), (seed, i, j)
+
+    def test_quantizer_and_freqs_use_the_fanout(self):
+        """make_quantizer's dither key and _draw_freqs' keys are exactly the
+        stream_keys fan-out (no ad-hoc fold_in constants left)."""
+        key = jax.random.PRNGKey(7)
+        k_sig, k_freq, k_dither = ckm_mod.stream_keys(key)
+        cfg = ckm_mod.CKMConfig(k=3, m=16, sketch_quantization="1bit")
+        q = ckm_mod.make_quantizer(key, cfg, 16)
+        expect = jax.random.uniform(
+            k_dither, (16,), minval=0.0, maxval=2.0 * np.pi
+        )
+        np.testing.assert_array_equal(np.asarray(q.dither), np.asarray(expect))

@@ -31,6 +31,7 @@ pytestmark = pytest.mark.decoder
 FAST = dict(
     atom_steps=60, joint_steps=40, nnls_iters=60, final_steps=120,
     shift_steps=40, shift_polish_steps=150,
+    amp_iters=40, amp_polish_steps=150,
 )
 
 
@@ -56,11 +57,11 @@ def problem():
 
 class TestRegistry:
     def test_builtins_registered(self):
-        assert set(available_decoders()) >= {"clompr", "sketch_shift"}
+        assert set(available_decoders()) >= {"clompr", "sketch_shift", "amp"}
 
     def test_unknown_decoder_raises_with_names(self, problem):
         with pytest.raises(KeyError, match="clompr"):
-            get_decoder("amp")
+            get_decoder("gamp_v2")
         z, w, lo, hi, _ = problem
         with pytest.raises(KeyError, match="available"):
             decode_sketch(
@@ -132,7 +133,7 @@ class TestClomprBitwiseParity:
 
 @pytest.mark.slow
 class TestDecoderContract:
-    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift"])
+    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift", "amp"])
     def test_replicate_monotonicity(self, problem, decoder):
         """Best-of-R cost is non-increasing in R for every decoder (the
         replicate-key sequence for R is a prefix of the one for R' > R)."""
@@ -145,7 +146,7 @@ class TestDecoderContract:
             costs[reps] = float(cost)
         assert costs[3] <= costs[1] + 1e-6, costs
 
-    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift"])
+    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift", "amp"])
     def test_output_contract(self, problem, decoder):
         """(K, n) centroids inside the box, normalised weights, finite cost."""
         z, w, lo, hi, _ = problem
@@ -159,7 +160,7 @@ class TestDecoderContract:
         assert np.all(a >= 0) and abs(a.sum() - 1.0) < 1e-5
         assert np.isfinite(float(cost))
 
-    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift"])
+    @pytest.mark.parametrize("decoder", ["clompr", "sketch_shift", "amp"])
     @pytest.mark.parametrize("init", ["sample", "kpp"])
     def test_x_init_strategies_run(self, problem, decoder, init):
         z, w, lo, hi, x = problem

@@ -88,6 +88,55 @@ class TestMonoidLaws:
         np.testing.assert_allclose(np.asarray(z), np.asarray(ref), atol=1e-4)
 
 
+class TestZeroWeightFinalize:
+    """Regression (PR 6): finalize divides by ``weight_sum``; an empty stream
+    (or an all-zero-weight shard) must produce the *zero sketch* — explicitly
+    guarded, not left to ``0 / denom-floor`` luck — for the float and the
+    quantized state flavours alike."""
+
+    def _engines(self, quantized):
+        from repro.core import quantize as qz
+
+        _, w = _data(5, npts=8, m=24)
+        q = (
+            qz.make_quantizer(jax.random.PRNGKey(3), 24, "1bit")
+            if quantized
+            else None
+        )
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return {
+            "xla": eng_mod.SketchEngine(w, "xla", quantizer=q),
+            "pallas": eng_mod.SketchEngine(
+                w, "pallas", block_n=128, block_m=128, quantizer=q
+            ),
+            "sharded": eng_mod.SketchEngine(
+                w, "sharded", mesh=mesh, quantizer=q
+            ),
+        }
+
+    @pytest.mark.parametrize("quantized", [False, True], ids=["float", "1bit"])
+    def test_empty_stream_finalizes_to_zero_sketch(self, quantized):
+        for name, e in self._engines(quantized).items():
+            z, _, _ = e.finalize(e.init_state())
+            np.testing.assert_array_equal(
+                np.asarray(z), np.zeros(48, np.float32), err_msg=name
+            )
+
+    def test_zero_weight_updates_finalize_to_zero_sketch(self):
+        # Float states only: the quantized flavour rejects per-point weights
+        # (integer counts), so its zero-weight case is the empty stream above.
+        x, _ = _data(5, npts=64, m=24)
+        for name, e in self._engines(False).items():
+            if name == "sharded":
+                continue  # shard_points needs >= data-axis rows; covered above
+            s = e.update(e.init_state(), x, jnp.zeros((64,)))
+            z, _, _ = e.finalize(s)
+            np.testing.assert_array_equal(
+                np.asarray(z), np.zeros(48, np.float32), err_msg=name
+            )
+            assert float(getattr(s, "weight_sum")) == 0.0
+
+
 class TestBackendParity:
     def test_pallas_matches_xla_within_1e4(self):
         """Acceptance: pallas (interpret on CPU) == xla backend within 1e-4."""

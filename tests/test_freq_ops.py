@@ -12,8 +12,9 @@ acceptance pins:
   adjoint is the true transpose, and its column norms follow the drawn
   adapted radii exactly (the radial-rescaling property);
 - ``spec()`` rebuilds operators exactly and is O(1) bytes;
-- the deprecation shim keeps raw ``(n, m)`` arrays working, with a
-  ``DeprecationWarning`` on the decoder helpers' raw path;
+- the raw ``(n, m)`` convenience wrap still works on the sketch/engine entry
+  points, while the decoder helpers and kernel wrappers raise ``TypeError``
+  (their deprecation window closed in PR 6);
 - ``draw_frequencies`` takes a ``dtype`` and the radius inverse-CDF sampler
   agrees between f32 and f64 on identical uniforms;
 - ``estimate_sigma2`` recovers the within-cluster scale within 2x on
@@ -298,32 +299,33 @@ class TestSpec:
 
 
 class TestDeprecationShim:
-    def test_decoder_helpers_warn_on_raw_matrix(self):
-        """Satellite: helpers accept raw arrays + DeprecationWarning."""
+    def test_decoder_helpers_reject_raw_matrix(self):
+        """Satellite (PR 6): the one-release raw-array window is closed —
+        the decoder helpers now raise TypeError instead of warning."""
         op = _ops()["dense"]
         z = jnp.ones((2 * op.m,))
         cents = jnp.zeros((3, op.n))
         alpha = jnp.ones((3,)) / 3.0
-        for fn, args in (
-            (dec_common.residual_cost, (z, cents, alpha)),
-            (dec_common.resolution_radius, ()),
-        ):
-            with warnings.catch_warnings(record=True) as rec:
-                warnings.simplefilter("always")
-                raw = fn(*args, op.w) if args else fn(op.w, 2.5)
-            assert any(
-                issubclass(r.category, DeprecationWarning) for r in rec
-            ), fn.__name__
-            with warnings.catch_warnings(record=True) as rec:
-                warnings.simplefilter("always")
-                via_op = fn(*args, op) if args else fn(op, 2.5)
-            assert not any(
-                issubclass(r.category, DeprecationWarning) for r in rec
-            ), fn.__name__
-            assert bool(jnp.array_equal(raw, via_op))
+        with pytest.raises(TypeError, match="as_operator"):
+            dec_common.residual_cost(z, cents, alpha, op.w)
+        with pytest.raises(TypeError, match="as_operator"):
+            dec_common.resolution_radius(op.w, 2.5)
+        # The explicit wrap is the supported path and matches the operator.
+        raw = dec_common.residual_cost(z, cents, alpha, fo.as_operator(op.w))
+        via_op = dec_common.residual_cost(z, cents, alpha, op)
+        assert bool(jnp.array_equal(raw, via_op))
+
+    def test_kernel_wrappers_reject_raw_matrix(self):
+        """kernels.ops closed the same window: raw w -> TypeError."""
+        from repro.kernels import ops
+
+        op = _ops()["dense"]
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, op.n))
+        with pytest.raises(TypeError, match="as_operator"):
+            ops.fourier_sketch(x, op.w, jnp.full((32,), 1.0 / 32))
 
     def test_sketch_and_engine_accept_raw_silently(self):
-        """The thin shim: raw w keeps working (one release) without noise."""
+        """The convenience wrap: raw w keeps working here without noise."""
         op = _ops()["dense"]
         x = jax.random.normal(jax.random.PRNGKey(0), (64, op.n))
         with warnings.catch_warnings():

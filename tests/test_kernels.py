@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import freq_ops as fo
 from repro.kernels import ops, ref
 
 
@@ -31,7 +32,9 @@ class TestFourierSketchKernel:
     )
     def test_matches_ref(self, n_pts, feat, m):
         x, w, beta = _data(0, n_pts, feat, m)
-        z = ops.fourier_sketch(x, w, beta, block_n=128, block_m=128, interpret=True)
+        z = ops.fourier_sketch(
+            x, fo.as_operator(w), beta, block_n=128, block_m=128, interpret=True
+        )
         cos_ref, sin_ref = ref.fourier_sketch_ref(x, w, beta)
         np.testing.assert_allclose(np.asarray(z[:m]), np.asarray(cos_ref), atol=1e-4)
         np.testing.assert_allclose(np.asarray(z[m:]), np.asarray(-sin_ref), atol=1e-4)
@@ -41,7 +44,9 @@ class TestFourierSketchKernel:
         from repro.core import sketch as sk
 
         x, w, _ = _data(1, 400, 6, 64)
-        z_kernel = ops.fourier_sketch(x, w, interpret=True, block_n=128, block_m=128)
+        z_kernel = ops.fourier_sketch(
+            x, fo.as_operator(w), interpret=True, block_n=128, block_m=128
+        )
         z_core = sk.sketch(x, w)
         np.testing.assert_allclose(np.asarray(z_kernel), np.asarray(z_core), atol=1e-4)
 
@@ -49,7 +54,8 @@ class TestFourierSketchKernel:
     def test_block_shape_invariance(self, block_n, block_m):
         x, w, beta = _data(2, 300, 12, 200)
         z = ops.fourier_sketch(
-            x, w, beta, block_n=block_n, block_m=block_m, interpret=True
+            x, fo.as_operator(w), beta, block_n=block_n, block_m=block_m,
+            interpret=True,
         )
         cos_ref, sin_ref = ref.fourier_sketch_ref(x, w, beta)
         np.testing.assert_allclose(np.asarray(z[:200]), np.asarray(cos_ref), atol=1e-4)
@@ -59,8 +65,8 @@ class TestFourierSketchKernel:
         """Inputs in bf16 are upcast to f32 accumulate in the wrapper."""
         x, w, beta = _data(3, 256, 8, 128)
         z = ops.fourier_sketch(
-            x.astype(dtype), w.astype(dtype), beta, interpret=True,
-            block_n=128, block_m=128,
+            x.astype(dtype), fo.as_operator(w.astype(dtype)), beta,
+            interpret=True, block_n=128, block_m=128,
         )
         cos_ref, _ = ref.fourier_sketch_ref(x.astype(dtype), w.astype(dtype), beta)
         atol = 1e-4 if dtype == jnp.float32 else 0.3
@@ -116,7 +122,7 @@ class TestSketchShiftKernel:
         c = jax.random.normal(kc, (p_cand, feat)) * 2.0
         w = jax.random.normal(kw, (feat, m)) * 0.7
         z = jax.random.normal(kz, (2 * m,)) * 0.3
-        return c, w, z
+        return c, fo.as_operator(w), z
 
     @pytest.mark.parametrize(
         "p_cand,feat,m",
@@ -132,7 +138,7 @@ class TestSketchShiftKernel:
         f, g = ops.sketch_shift_scores(
             c, w, z, impl="pallas", block_p=8, block_m=128, interpret=True
         )
-        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w, z)
+        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w.materialize(), z)
         np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=1e-5)
         np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
 
@@ -140,7 +146,7 @@ class TestSketchShiftKernel:
         """The decoder's default impl vs the complex-arithmetic oracle."""
         c, w, z = self._problem(1, 25, 6, 250)
         f, g = ops.sketch_shift_scores(c, w, z, impl="xla")
-        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w, z)
+        f_ref, g_ref = ref.sketch_shift_scores_ref(c, w.materialize(), z)
         np.testing.assert_allclose(np.asarray(f), np.asarray(f_ref), atol=1e-5)
         np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
 

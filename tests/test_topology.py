@@ -263,6 +263,9 @@ class TestSketchJobSpec:
             SketchJobSpec(ingest="eager").validate()
         with pytest.raises(ValueError):
             SketchJobSpec(ingest_prefetch=0).validate()
+        SketchJobSpec(decoder="amp").validate()
+        with pytest.raises(KeyError):
+            SketchJobSpec(decoder="nope").validate()
 
     def test_ckm_overrides_round_trip(self):
         import dataclasses
@@ -271,7 +274,7 @@ class TestSketchJobSpec:
 
         spec = SketchJobSpec(
             reduce_topology="tree", ingest="async", ingest_prefetch=4,
-            sketch_quantization="1bit",
+            sketch_quantization="1bit", decoder="amp",
         )
         cfg = dataclasses.replace(
             ckm_mod.CKMConfig(k=3), **spec.ckm_overrides()
@@ -279,4 +282,6 @@ class TestSketchJobSpec:
         assert cfg.reduce_topology == "tree"
         assert cfg.ingest == "async" and cfg.ingest_prefetch == 4
         assert cfg.sketch_quantization == "1bit"
+        assert cfg.decoder == "amp"
         assert "topology=tree" in spec.describe()
+        assert "decoder=amp" in spec.describe()
