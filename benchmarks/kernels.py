@@ -24,6 +24,13 @@ spec-wire bytes (the spec-not-matrix acceptance), a roofline cross-check
 of the structured flops model against compiled HLO, and the
 structured-vs-dense SSE acceptance (within 5% on blobs).
 
+Fleet rows (ISSUE 7, ``run_fleet``): multi-tenant serving throughput — one
+vmapped stacked ``FleetEngine.update`` over T=1024 tenants vs a Python loop
+of 1024 per-tenant ``SketchEngine`` updates (same operators, bitwise-equal
+states).  The acceptance is the batched dispatch >= 5x faster at T=1024;
+parity is asserted here on the full fleet and pinned exhaustively in
+``tests/test_fleet.py``.
+
 Scaling rows (PR 4):
 - ingest: sync vs async ``fit_streaming`` over an I/O-bound blobs stream
   (per-batch latency calibrated to the measured sketch-compute time, the
@@ -438,6 +445,73 @@ def run_freq_ops(results: dict, n_pts=4096, feat=2048, m=2048, sigma2=1.0):
     return results
 
 
+def run_fleet(results: dict, n_tenants=1024, batch=32, feat=8, m=64):
+    """Multi-tenant fleet row (ISSUE 7): stacked-vs-looped update throughput.
+
+    The fleet ingests one aligned block — one ``(batch, n)`` batch per tenant
+    — two ways: ONE vmapped ``FleetEngine.update`` dispatch over the stacked
+    ``(T, ...)`` state, and a Python loop of T per-tenant ``SketchEngine``
+    updates (the same trace the fleet vmaps, so the states must match
+    bitwise).  Both paths are warm (jit caches populated) and timed on the
+    real CPU execution path; the speedup is pure dispatch/batching win, which
+    is the point — per-tenant serving cost is dominated by T Python+XLA
+    dispatches, not by the O(batch·n·m) math.  Acceptance: >= 5x at T=1024.
+    """
+    from repro.core import fleet as fl
+
+    specs = fl.fleet_specs(
+        jax.random.PRNGKey(17), n_tenants, "dense", m, feat, 1.0
+    )
+    fleet = fl.FleetEngine(specs, chunk=batch)
+    xs = jax.random.normal(jax.random.PRNGKey(18), (n_tenants, batch, feat))
+
+    state0 = fleet.init_state()
+    jax.block_until_ready(fleet.update(state0, xs))  # warm the vmapped jit
+    state, t_stacked = timed(fleet.update, state0, xs)
+
+    engines = [fleet.tenant_engine(t) for t in range(n_tenants)]
+    inits = [e.init_state() for e in engines]
+    jax.block_until_ready(engines[0].update(inits[0], xs[0]))  # warm
+
+    def looped():
+        return [
+            e.update(s, xs[t]) for t, (e, s) in enumerate(zip(engines, inits))
+        ]
+
+    rows, t_looped = timed(looped)
+
+    # Bitwise parity across the whole fleet: restack the looped rows and
+    # compare every leaf (tests/test_fleet.py pins this per backend/flavour).
+    ref_stack = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *rows)
+    parity = all(
+        bool(jnp.array_equal(a, b))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(state),
+            jax.tree_util.tree_leaves(ref_stack),
+        )
+    )
+    assert parity, "stacked fleet update diverged from the per-tenant loop"
+
+    speedup = t_looped / t_stacked
+    results["fleet_update"] = {
+        "n_tenants": n_tenants,
+        "batch": batch,
+        "n": feat,
+        "m": m,
+        "stacked_seconds": t_stacked,
+        "looped_seconds": t_looped,
+        "speedup": speedup,
+        "bitwise_parity": parity,
+        "fleet_state_bytes": fleet.state_bytes(),
+        "meets_5x_acceptance": bool(speedup >= 5.0),
+    }
+    csv_line(
+        f"fleet_update_T{n_tenants}_B{batch}_m{m}", t_stacked,
+        f"looped={t_looped:.3f}s;speedup=x{speedup:.1f}",
+    )
+    return results
+
+
 def run_topologies(results: dict, p=8, n_pts=16384, feat=16, m=1024):
     """Per-topology merge rows: latency of reducing ``p`` quantized partial
     states through every registered schedule, the alpha-beta wire cost model
@@ -562,6 +636,7 @@ def run(full: bool = False):
     run_freq_ops(results)
     run_ingest(results)
     run_topologies(results)
+    run_fleet(results)
     save("kernels", results)
     # Acceptance checked AFTER save so a perf flake on a loaded machine
     # cannot discard the other rows computed in the same invocation.
@@ -570,6 +645,12 @@ def run(full: bool = False):
         f"async ingest speedup {ia['speedup']:.2f}x < 1.3x acceptance "
         f"(sync {ia['sync_fit_seconds']:.2f}s, "
         f"async {ia['async_fit_seconds']:.2f}s)"
+    )
+    fu = results["fleet_update"]
+    assert fu["meets_5x_acceptance"], (
+        f"fleet stacked update speedup {fu['speedup']:.1f}x < 5x acceptance "
+        f"(stacked {fu['stacked_seconds']:.3f}s, "
+        f"looped {fu['looped_seconds']:.3f}s)"
     )
     return results
 

@@ -44,17 +44,35 @@ class Checkpointer:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, state: Any, specs: Any | None = None):
-        """Synchronous atomic save."""
-        self.wait()
-        self._write(step, self._snapshot(state), specs)
+    def save(
+        self,
+        step: int,
+        state: Any,
+        specs: Any | None = None,
+        meta: dict | None = None,
+    ):
+        """Synchronous atomic save.
 
-    def save_async(self, step: int, state: Any, specs: Any | None = None):
+        ``meta``: optional JSON-serialisable dict stored verbatim in the
+        manifest and returned by :meth:`read_meta` — the slot for state that
+        is not an array leaf (a tenant's ``FreqOpSpec`` recipe, quantizer bit
+        width, version counters).  ``specs`` remain repr-only provenance.
+        """
+        self.wait()
+        self._write(step, self._snapshot(state), specs, meta)
+
+    def save_async(
+        self,
+        step: int,
+        state: Any,
+        specs: Any | None = None,
+        meta: dict | None = None,
+    ):
         """Snapshot now (device->host), write on a daemon thread."""
         self.wait()
         snap = self._snapshot(state)
         self._thread = threading.Thread(
-            target=self._write, args=(step, snap, specs), daemon=True
+            target=self._write, args=(step, snap, specs, meta), daemon=True
         )
         self._thread.start()
 
@@ -67,7 +85,7 @@ class Checkpointer:
         leaves, treedef = _flatten(state)
         return [np.asarray(jax.device_get(l)) for l in leaves], treedef
 
-    def _write(self, step: int, snap, specs):
+    def _write(self, step: int, snap, specs, meta=None):
         leaves, treedef = snap
         tmp = self.dir / f"step_{step:010d}.tmp"
         final = self.dir / f"step_{step:010d}"
@@ -93,6 +111,8 @@ class Checkpointer:
                              is_leaf=lambda x: hasattr(x, "update")),
             )
             manifest["specs"] = [str(s) for s in spec_leaves]
+        if meta is not None:
+            manifest["meta"] = meta
         with open(tmp / _MANIFEST, "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -121,8 +141,23 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_meta(self, step: int | None = None) -> dict:
+        """The ``meta`` dict stored with :meth:`save` (``{}`` when absent)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        manifest = json.loads(
+            (self.dir / f"step_{step:010d}" / _MANIFEST).read_text()
+        )
+        return manifest.get("meta", {})
+
     def restore(self, like: Any, step: int | None = None, shardings: Any | None = None):
         """Restore into the structure of ``like`` (a state or shape pytree).
+
+        Every leaf is validated against the manifest's recorded shape AND
+        dtype — a float state restored into a quantized ``like`` (same leaf
+        count, different accumulator dtype) fails loudly instead of silently
+        decoding int32 code sums as float32 garbage.
 
         ``shardings``: optional sharding pytree for the CURRENT mesh — leaves
         are device_put directly into it (elastic restart path).
@@ -137,6 +172,26 @@ class Checkpointer:
             f"checkpoint has {len(manifest['leaves'])} leaves, "
             f"state expects {len(leaves)}"
         )
+        problems = []
+        for i, (leaf, entry) in enumerate(zip(leaves, manifest["leaves"])):
+            want_shape = tuple(getattr(leaf, "shape", ()))
+            want_dtype = str(getattr(leaf, "dtype", ""))
+            if tuple(entry["shape"]) != want_shape:
+                problems.append(
+                    f"leaf {i}: checkpoint shape {tuple(entry['shape'])} != "
+                    f"state shape {want_shape}"
+                )
+            elif want_dtype and entry["dtype"] != want_dtype:
+                problems.append(
+                    f"leaf {i}: checkpoint dtype {entry['dtype']} != "
+                    f"state dtype {want_dtype}"
+                )
+        if problems:
+            raise ValueError(
+                f"checkpoint {d.name} does not fit the requested state "
+                "(wrong state flavour — e.g. quantized vs float?):\n"
+                + "\n".join(problems)
+            )
         loaded = [
             np.load(d / entry["file"]) for entry in manifest["leaves"]
         ]

@@ -33,6 +33,12 @@ from repro.core.decoders import (
     register_decoder,
 )
 from repro.core.engine import BACKENDS, SketchEngine
+from repro.core.fleet import (
+    FLEET_BACKENDS,
+    FleetEngine,
+    fleet_quantizers,
+    fleet_specs,
+)
 from repro.core.freq_ops import (
     FREQ_OPS,
     FreqOpSpec,
@@ -71,6 +77,10 @@ __all__ = [
     "register_decoder",
     "BACKENDS",
     "SketchEngine",
+    "FLEET_BACKENDS",
+    "FleetEngine",
+    "fleet_quantizers",
+    "fleet_specs",
     "FREQ_OPS",
     "FreqOpSpec",
     "FrequencyOperator",

@@ -1,0 +1,519 @@
+"""Multi-tenant fleet engine: thousands of sketch states as ONE stacked state.
+
+The paper's selling point — sketch size O(K·n) independent of dataset size —
+compounds across users: a tenant's entire clustering state is its O(m) sketch
+accumulators plus the ~70 B ``FreqOpSpec`` rebuild recipe (PR 5), so thousands
+of independent tenants fit in the memory one Lloyd-Max run would need.  This
+module is the compute layer that exploits that: per-tenant
+:class:`~repro.core.engine.SketchEngineState` s are held **stacked along a
+leading tenant axis** (``cos_acc (T, m)``, ``lower (T, n)``, …) and every
+monoid op runs ``vmap``-ed over that axis — one XLA dispatch for the whole
+fleet instead of T Python-dispatched engine calls.
+
+Contract: the vmapped monoid law
+--------------------------------
+For every tenant t, ``FleetEngine`` update/merge/finalize is **bitwise
+identical** to a per-tenant :class:`~repro.core.engine.SketchEngine` with the
+same operator/quantizer — the stacked path batches the *same* per-tenant
+trace (`tests/test_fleet.py` pins this for float and quantized states on the
+xla and pallas backends).  Everything the single-sketch stack guarantees
+(split invariance, merge associativity/commutativity, quantized bitwise
+merges) therefore lifts to the fleet for free.
+
+Request routing: segment-scatter
+--------------------------------
+Serving traffic arrives as interleaved ``(tenant_id, batch)`` requests, not
+as one aligned ``(T, B, n)`` block.  :meth:`FleetEngine.ingest` computes all
+request partials in one vmapped pass (per-request operators gathered from the
+stacked leaves by tenant id) and folds them into the stacked state with a
+segment-scatter: when tenant ids are unique within the call this is one XLA
+scatter-add/min/max per leaf; when a flush carries several requests for the
+same tenant it falls back to an ordered ``lax.scan`` fold so float partials
+combine in **arrival order** — exactly the association the tenant's isolated
+engine would have used, keeping the bitwise-isolation contract.
+
+Tenant state surgery (``tenant_state`` / ``set_tenant`` / ``reset_tenant``)
+is what eviction/restore builds on: a cold tenant's row is checkpointed
+(state leaves + spec), reset to the monoid identity, and scattered back in
+on demand — see ``repro.serve.fleet_service``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng_mod
+from repro.core import freq_ops as fo
+from repro.core import quantize as qz
+from repro.core import sketch as sk
+from repro.core.engine import QuantizedSketchEngineState, SketchEngineState
+
+__all__ = [
+    "FLEET_BACKENDS",
+    "FleetEngine",
+    "fleet_specs",
+    "fleet_quantizers",
+    "stack_operators",
+]
+
+# The fleet batches per-tenant compute with vmap; the sharded backend manages
+# its own mesh collective and is not a per-tenant trace to batch.
+FLEET_BACKENDS = ("xla", "pallas")
+
+
+def fleet_specs(
+    key: jax.Array,
+    n_tenants: int,
+    name: str,
+    m: int,
+    n: int,
+    sigma2,
+    *,
+    dist: str = "adapted_radius",
+    dtype=jnp.float32,
+) -> list[fo.FreqOpSpec]:
+    """Independent per-tenant operator specs from one parent key.
+
+    Tenant t draws from ``fold_in(key, t)`` — the recipe list is what a
+    control plane ships (~70 B/tenant) and what :class:`FleetEngine` rebuilds
+    operators from.
+    """
+    specs = []
+    for t in range(n_tenants):
+        op = fo.make_operator(
+            name, jax.random.fold_in(key, t), m, n, sigma2, dist=dist,
+            dtype=dtype,
+        )
+        specs.append(op.spec())
+    return specs
+
+
+def fleet_quantizers(
+    key: jax.Array, n_tenants: int, m: int, spec: str
+) -> list[qz.SketchQuantizer] | None:
+    """Per-tenant quantizers (independent dither draws) or None for float."""
+    if spec == "none":
+        return None
+    return [
+        qz.make_quantizer(jax.random.fold_in(key, t), m, spec)
+        for t in range(n_tenants)
+    ]
+
+
+def stack_operators(ops: Sequence[fo.FrequencyOperator]):
+    """Stack operator leaves along a new leading tenant axis.
+
+    Returns ``(stacked_op, treedefs)``: ``stacked_op`` is a pytree of the
+    operator class whose array leaves carry the tenant axis (valid *only* as
+    a vmap/gather carrier — its static n/m/spec aux comes from tenant 0), and
+    ``treedefs`` the per-tenant treedefs used to slice true per-tenant
+    operators back out.
+    """
+    flat = [jax.tree_util.tree_flatten(op) for op in ops]
+    leaves0, treedef0 = flat[0]
+    for t, (leaves, _) in enumerate(flat[1:], start=1):
+        if len(leaves) != len(leaves0) or any(
+            a.shape != b.shape or a.dtype != b.dtype
+            for a, b in zip(leaves, leaves0)
+        ):
+            raise ValueError(
+                f"tenant {t} operator leaves do not match tenant 0 "
+                "(all fleet tenants must share the operator family and (n, m))"
+            )
+    stacked = [jnp.stack(ls) for ls in zip(*(leaves for leaves, _ in flat))]
+    return (
+        jax.tree_util.tree_unflatten(treedef0, stacked),
+        [treedef for _, treedef in flat],
+    )
+
+
+class FleetEngine:
+    """T independent sketch engines as one vmapped, stacked-state engine.
+
+    Parameters
+    ----------
+    operators : per-tenant frequency operators **or** their ``FreqOpSpec`` s
+        (rebuilt via ``freq_ops.from_spec`` — the ~70 B recipe is the
+        canonical fleet description).  All tenants must share the family and
+        ``(n, m)``; keys/scales may differ freely.
+    backend : ``"xla"`` or ``"pallas"`` — the per-tenant update trace that is
+        vmapped (same dispatch as ``SketchEngine``'s backend matrix).
+    quantizers : optional per-tenant ``SketchQuantizer`` s (one dither row
+        each, shared bit width) — switches the stacked state to the int32
+        :class:`~repro.core.engine.QuantizedSketchEngineState` twin.
+    chunk, block_n, block_m, interpret : forwarded to the per-tenant trace.
+    """
+
+    def __init__(
+        self,
+        operators: Sequence[fo.FrequencyOperator | fo.FreqOpSpec],
+        *,
+        backend: str = "xla",
+        quantizers: Sequence[qz.SketchQuantizer] | None = None,
+        chunk: int = 8192,
+        block_n: int = 1024,
+        block_m: int = 512,
+        interpret: bool | None = None,
+    ):
+        if backend not in FLEET_BACKENDS:
+            raise ValueError(
+                f"fleet backend must be one of {FLEET_BACKENDS}, got "
+                f"{backend!r}"
+            )
+        if not operators:
+            raise ValueError("a fleet needs at least one tenant operator")
+        ops = [
+            fo.from_spec(o) if isinstance(o, fo.FreqOpSpec) else o
+            for o in operators
+        ]
+        self.n_tenants = len(ops)
+        self.n, self.m = ops[0].n, ops[0].m
+        self.backend = backend
+        self.chunk = chunk
+        self.block_n = block_n
+        self.block_m = block_m
+        self.interpret = interpret
+        self.specs: tuple[fo.FreqOpSpec | None, ...] = tuple(
+            self._try_spec(op) for op in ops
+        )
+        self._stacked_op, self._op_treedefs = stack_operators(ops)
+        self._op_leaves = jax.tree_util.tree_leaves(self._stacked_op)
+        self.bits: int | None = None
+        self.dither: jax.Array | None = None
+        if quantizers is not None:
+            if len(quantizers) != self.n_tenants:
+                raise ValueError(
+                    f"{len(quantizers)} quantizers for {self.n_tenants} "
+                    "tenants"
+                )
+            bits = {q.bits for q in quantizers}
+            if len(bits) != 1:
+                raise ValueError(
+                    f"all fleet tenants must share a bit width, got {bits}"
+                )
+            self.bits = bits.pop()
+            self.dither = jnp.stack([q.dither for q in quantizers])
+            if self.dither.shape != (self.n_tenants, self.m):
+                raise ValueError(
+                    f"stacked dither shape {self.dither.shape} != "
+                    f"{(self.n_tenants, self.m)}"
+                )
+
+    @staticmethod
+    def _try_spec(op: fo.FrequencyOperator) -> fo.FreqOpSpec | None:
+        try:
+            return op.spec()
+        except ValueError:
+            return None
+
+    @property
+    def quantized(self) -> bool:
+        return self.bits is not None
+
+    # -- per-tenant views ---------------------------------------------------
+
+    def operator(self, tenant: int) -> fo.FrequencyOperator:
+        """Tenant ``tenant``'s own operator, sliced from the stacked leaves
+        (bitwise the operator it was constructed from)."""
+        leaves = [l[tenant] for l in self._op_leaves]
+        return jax.tree_util.tree_unflatten(self._op_treedefs[tenant], leaves)
+
+    def quantizer(self, tenant: int) -> qz.SketchQuantizer | None:
+        if self.bits is None:
+            return None
+        return qz.SketchQuantizer(bits=self.bits, dither=self.dither[tenant])
+
+    def tenant_engine(self, tenant: int) -> eng_mod.SketchEngine:
+        """A plain single-tenant ``SketchEngine`` over tenant's operator —
+        the reference this fleet is bitwise-parity-tested against."""
+        return eng_mod.SketchEngine(
+            self.operator(tenant),
+            self.backend,
+            chunk=self.chunk,
+            block_n=self.block_n,
+            block_m=self.block_m,
+            interpret=self.interpret,
+            quantizer=self.quantizer(tenant),
+        )
+
+    # -- stacked monoid ops -------------------------------------------------
+
+    def init_state(self):
+        """Stacked monoid identity: every tenant row is ``init_state()``."""
+        t, n, m = self.n_tenants, self.n, self.m
+        if self.quantized:
+            return QuantizedSketchEngineState(
+                qcos_acc=jnp.zeros((t, m), jnp.int32),
+                qsin_acc=jnp.zeros((t, m), jnp.int32),
+                weight_sum=jnp.zeros((t,), jnp.float32),
+                lower=jnp.full((t, n), jnp.inf, jnp.float32),
+                upper=jnp.full((t, n), -jnp.inf, jnp.float32),
+                count=jnp.zeros((t,), jnp.float32),
+            )
+        return SketchEngineState(
+            cos_acc=jnp.zeros((t, m), jnp.float32),
+            sin_acc=jnp.zeros((t, m), jnp.float32),
+            weight_sum=jnp.zeros((t,), jnp.float32),
+            lower=jnp.full((t, n), jnp.inf, jnp.float32),
+            upper=jnp.full((t, n), -jnp.inf, jnp.float32),
+            count=jnp.zeros((t,), jnp.float32),
+        )
+
+    def _tenant_part(self, op, x, weights):
+        """One tenant's batch partial — the SAME trace SketchEngine._batch_state
+        runs, factored over the operator argument so vmap can batch it."""
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            cos_s, sin_s = ops.fourier_sketch_sums(
+                x,
+                op,
+                weights,
+                block_n=self.block_n,
+                block_m=self.block_m,
+                interpret=self.interpret,
+            )
+        else:
+            part = sk.sketch(
+                x,
+                op,
+                weights=weights,
+                chunk=min(self.chunk, max(x.shape[0], 1)),
+            )
+            cos_s, sin_s = part[: self.m], -part[self.m :]
+        return SketchEngineState(
+            cos_acc=cos_s,
+            sin_acc=sin_s,
+            weight_sum=jnp.sum(weights),
+            lower=jnp.min(x, axis=0),
+            upper=jnp.max(x, axis=0),
+            count=jnp.asarray(x.shape[0], jnp.float32),
+        )
+
+    def _tenant_qpart(self, op, dither, x):
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            qcos, qsin = ops.quantized_fourier_sketch_sums(
+                x,
+                op,
+                dither,
+                bits=self.bits,
+                block_n=self.block_n,
+                block_m=self.block_m,
+                interpret=self.interpret,
+            )
+        else:
+            qcos, qsin = sk.sketch_quantized(
+                x,
+                op,
+                dither,
+                bits=self.bits,
+                chunk=min(self.chunk, max(x.shape[0], 1)),
+            )
+        n_pts = jnp.asarray(x.shape[0], jnp.float32)
+        return QuantizedSketchEngineState(
+            qcos_acc=qcos,
+            qsin_acc=qsin,
+            weight_sum=n_pts,
+            lower=jnp.min(x, axis=0),
+            upper=jnp.max(x, axis=0),
+            count=n_pts,
+        )
+
+    def _parts(self, stacked_op, batches, weights):
+        """Vmapped per-tenant partial states for stacked ``(R, B, n)`` batches."""
+        x = jnp.asarray(batches, jnp.float32)
+        if x.ndim != 3 or x.shape[-1] != self.n:
+            raise ValueError(
+                f"batches must be (T, B, {self.n}), got {x.shape}"
+            )
+        if self.quantized:
+            if weights is not None:
+                raise ValueError(
+                    "quantized fleet states accumulate unit-weight integer "
+                    "counts; per-point weights are not representable"
+                )
+            return jax.vmap(self._tenant_qpart)(stacked_op, self.dither, x)
+        if weights is None:
+            weights = jnp.ones(x.shape[:2], jnp.float32)
+        else:
+            weights = jnp.asarray(weights, jnp.float32)
+        return jax.vmap(self._tenant_part)(stacked_op, x, weights)
+
+    def update(self, state, batches, weights=None):
+        """Fold one aligned block ``batches: (T, B, n)`` — one batch per
+        tenant — into the stacked state in a single vmapped dispatch.
+
+        Row t is bitwise what ``tenant_engine(t).update`` would produce.
+        """
+        parts = self._parts(self._stacked_op, batches, weights)
+        return eng_mod._merge_states(state, parts)
+
+    def merge(self, a, b):
+        """Stacked associative+commutative combine (elementwise, so the
+        single-engine merge applies to (T, …) leaves unchanged)."""
+        return eng_mod._merge_states(a, b)
+
+    def finalize(self, state):
+        """-> ``(z (T, 2m), lower (T, n), upper (T, n))``, all tenants."""
+        self._check_capacity(state)
+        if self.quantized:
+            fin = functools.partial(eng_mod._finalize_quantized, bits=self.bits)
+            return jax.vmap(fin)(state, self.dither)
+        return jax.vmap(eng_mod._finalize_state)(state)
+
+    def _check_capacity(self, state):
+        if not self.quantized:
+            return
+        cap = qz.accumulator_capacity(self.bits)
+        if not isinstance(state.count, jax.core.Tracer) and float(
+            jnp.max(state.count)
+        ) > cap:
+            raise ValueError(
+                f"quantized fleet accumulators overflow: a tenant folded "
+                f"{float(jnp.max(state.count)):.0f} points at {self.bits} "
+                f"bits, over the int32 capacity of {cap}"
+            )
+
+    # -- request routing: segment-scatter -----------------------------------
+
+    def ingest(self, state, tenant_ids, batches, weights=None):
+        """Fold interleaved requests ``(tenant_ids (R,), batches (R, B, n))``
+        into the stacked state.
+
+        Partials are computed in ONE vmapped pass over per-request operators
+        gathered by tenant id.  The fold into the state is a segment-scatter:
+        unique ids within a call use one scatter-add/min/max per leaf; calls
+        carrying duplicate ids (several requests for one tenant in a flush)
+        take an ordered ``lax.scan`` fold so the tenant's float partials
+        combine in arrival order — the same association its isolated engine
+        uses, preserving bitwise tenant isolation.
+        """
+        ids = jnp.asarray(tenant_ids, jnp.int32)
+        if ids.ndim != 1 or ids.shape[0] != jnp.asarray(batches).shape[0]:
+            raise ValueError(
+                f"tenant_ids {ids.shape} must be (R,) matching batches "
+                f"{jnp.asarray(batches).shape}"
+            )
+        gathered = jax.tree_util.tree_map(
+            lambda l: l[ids], self._stacked_op
+        )
+        if self.quantized:
+            x = jnp.asarray(batches, jnp.float32)
+            if weights is not None:
+                raise ValueError(
+                    "quantized fleet states accumulate unit-weight integer "
+                    "counts; per-point weights are not representable"
+                )
+            parts = jax.vmap(self._tenant_qpart)(
+                gathered, self.dither[ids], x
+            )
+        else:
+            parts = self._parts(gathered, batches, weights)
+
+        unique = not isinstance(ids, jax.core.Tracer) and (
+            len(set(int(i) for i in ids)) == ids.shape[0]
+        )
+        if unique:
+            return self._scatter_parts(state, ids, parts)
+        return self._scan_parts(state, ids, parts)
+
+    @staticmethod
+    def _scatter_parts(state, ids, parts):
+        """One scatter per leaf.  Sum leaves scatter-add; bounds scatter
+        min/max — with unique ids each row sees exactly one partial, so this
+        is the per-tenant merge with no association ambiguity."""
+        add = lambda l, p: l.at[ids].add(p)  # noqa: E731
+        if isinstance(state, QuantizedSketchEngineState):
+            return QuantizedSketchEngineState(
+                qcos_acc=add(state.qcos_acc, parts.qcos_acc),
+                qsin_acc=add(state.qsin_acc, parts.qsin_acc),
+                weight_sum=add(state.weight_sum, parts.weight_sum),
+                lower=state.lower.at[ids].min(parts.lower),
+                upper=state.upper.at[ids].max(parts.upper),
+                count=add(state.count, parts.count),
+            )
+        return SketchEngineState(
+            cos_acc=add(state.cos_acc, parts.cos_acc),
+            sin_acc=add(state.sin_acc, parts.sin_acc),
+            weight_sum=add(state.weight_sum, parts.weight_sum),
+            lower=state.lower.at[ids].min(parts.lower),
+            upper=state.upper.at[ids].max(parts.upper),
+            count=add(state.count, parts.count),
+        )
+
+    @staticmethod
+    def _scan_parts(state, ids, parts):
+        """Arrival-order fold for duplicate ids: request r merges into its
+        tenant's row before request r+1 — float association matches the
+        isolated engine's sequential update exactly."""
+
+        def fold(st, inp):
+            tid, part = inp
+            row = jax.tree_util.tree_map(lambda l: l[tid], st)
+            merged = eng_mod._merge_states(row, part)
+            st = jax.tree_util.tree_map(
+                lambda l, r: l.at[tid].set(r), st, merged
+            )
+            return st, None
+
+        state, _ = jax.lax.scan(fold, state, (ids, parts))
+        return state
+
+    # -- tenant state surgery (evict / restore build on these) --------------
+
+    def tenant_state(self, state, tenant: int):
+        """Tenant ``tenant``'s row as a plain single-engine state."""
+        return jax.tree_util.tree_map(lambda l: l[tenant], state)
+
+    def set_tenant(self, state, tenant: int, row):
+        """Stacked state with tenant's row replaced by ``row``."""
+        return jax.tree_util.tree_map(
+            lambda l, r: l.at[tenant].set(jnp.asarray(r, l.dtype)), state, row
+        )
+
+    def reset_tenant(self, state, tenant: int):
+        """Tenant's row back to the monoid identity (post-eviction hole)."""
+        identity = self.tenant_engine(tenant).init_state()
+        return self.set_tenant(state, tenant, identity)
+
+    def merge_tenant(self, state, tenant: int, partial):
+        """Fold an externally produced partial (edge sketcher, restored
+        checkpoint) into one tenant's row: ``row <- merge(row, partial)``."""
+        row = self.tenant_state(state, tenant)
+        return self.set_tenant(
+            state, tenant, eng_mod._merge_states(row, partial)
+        )
+
+    def finalize_tenant(self, state, tenant: int):
+        """Finalize ONE tenant — O(m), the decode-on-demand hot path (the
+        full-fleet :meth:`finalize` is O(T·m))."""
+        row = self.tenant_state(state, tenant)
+        if self.quantized:
+            self._check_capacity(state)
+            return eng_mod._finalize_quantized(
+                row, self.dither[tenant], self.bits
+            )
+        return eng_mod._finalize_state(row)
+
+    def state_bytes(self) -> int:
+        """Resident bytes of the stacked fleet state (all T tenants)."""
+        state = self.init_state()
+        return int(
+            sum(
+                l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(state)
+            )
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        q = f", bits={self.bits}" if self.quantized else ""
+        return (
+            f"FleetEngine(T={self.n_tenants}, n={self.n}, m={self.m}, "
+            f"backend={self.backend!r}{q})"
+        )

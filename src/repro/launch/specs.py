@@ -41,6 +41,19 @@ class SketchJobSpec:
     # Sketch decoder (core.decoders registry): "clompr" | "sketch_shift" |
     # "amp" | any registered name.
     decoder: str = "clompr"
+    # -- fleet deployment (multi-tenant sketch serving, core.fleet) ---------
+    # Number of independent tenant sketch states held stacked in one
+    # FleetEngine state; 1 = the classic single-sketch job.
+    n_tenants: int = 1
+    # How many shards the tenant axis splits into (each shard holds a
+    # contiguous block of n_tenants / tenant_shards rows); n_tenants must be
+    # divisible by this extent.
+    tenant_shards: int = 1
+    # Mesh-axis name the tenant shards map onto in a multi-device deployment.
+    tenant_shard_axis: str = "tenant"
+    # LRU capacity of the decode-on-demand cache (decoded models, keyed on
+    # (tenant, state-version)); 0 disables caching.
+    decode_cache_entries: int = 256
 
     def validate(self) -> "SketchJobSpec":
         from repro.core.decoders import get_decoder
@@ -63,6 +76,31 @@ class SketchJobSpec:
             raise ValueError(
                 f"ingest_prefetch must be >= 1, got {self.ingest_prefetch}"
             )
+        if self.n_tenants < 1:
+            raise ValueError(f"n_tenants must be >= 1, got {self.n_tenants}")
+        if self.tenant_shards < 1:
+            raise ValueError(
+                f"tenant_shards must be >= 1, got {self.tenant_shards}"
+            )
+        if self.n_tenants % self.tenant_shards:
+            raise ValueError(
+                f"n_tenants={self.n_tenants} is not divisible by the tenant "
+                f"shard extent tenant_shards={self.tenant_shards}; every "
+                f"'{self.tenant_shard_axis}' shard must hold an equal block "
+                "of tenant rows"
+            )
+        if not self.tenant_shard_axis:
+            raise ValueError("tenant_shard_axis must be a non-empty axis name")
+        if self.decode_cache_entries < 0:
+            raise ValueError(
+                f"decode_cache_entries must be >= 0, got "
+                f"{self.decode_cache_entries}"
+            )
+        if self.n_tenants > 1 and self.backend not in ("xla", "pallas"):
+            raise ValueError(
+                f"fleet jobs (n_tenants={self.n_tenants}) run on the "
+                f"vmapped xla|pallas backends, got {self.backend!r}"
+            )
         return self
 
     def ckm_overrides(self) -> dict:
@@ -78,12 +116,19 @@ class SketchJobSpec:
         }
 
     def describe(self) -> str:
-        return (
+        base = (
             f"backend={self.backend} topology={self.reduce_topology} "
             f"ingest={self.ingest}(depth={self.ingest_prefetch}) "
             f"quantize={self.sketch_quantization} freq_op={self.freq_op} "
             f"decoder={self.decoder}"
         )
+        if self.n_tenants > 1:
+            base += (
+                f" fleet={self.n_tenants}x{self.tenant_shards}shards"
+                f"(axis={self.tenant_shard_axis},"
+                f"cache={self.decode_cache_entries})"
+            )
+        return base
 
 
 def sds(shape, dtype):

@@ -1,0 +1,317 @@
+"""Tenant-sharded sketch serving: ingest, decode-on-demand, evict/restore.
+
+``FleetService`` is the request-facing wrapper around
+:class:`repro.core.fleet.FleetEngine`: it buffers interleaved
+``(tenant_id, batch)`` requests, flushes them through the async ingest
+pipeline (``core.ingest.prefetched`` stages host->device transfer under
+compute, exactly like ``fit_streaming``'s async mode) into the stacked state
+via the engine's segment-scatter, and serves **decode-on-demand**: a tenant's
+centroids are only computed when asked for, and memoised in an LRU keyed on
+``(tenant, state_version)`` — traffic for other tenants never invalidates a
+cached decode, and any write to a tenant bumps its version so a stale decode
+can never be served.
+
+Cold tenants are evicted through ``checkpoint.checkpointer.Checkpointer``:
+the tenant's O(m) state row plus its ``FreqOpSpec`` (the ~70 B operator
+recipe — never the matrix) land in an atomic per-tenant checkpoint, the row
+is reset to the monoid identity, and the first request or decode that
+touches the tenant again restores it transparently.  Restore reproduces the
+exact pre-eviction accumulators (bitwise — `tests/test_fleet.py`), so
+evict/restore is invisible in the sketch algebra.
+
+Default decoder: ``"sketch_shift"`` (Belhadji & Gribonval 2023) — the cheap
+decoder the hot decode path wants; any registered decoder name works.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from pathlib import Path
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import ckm as ckm_mod
+from repro.core import fleet as fleet_mod
+from repro.core import ingest as ingest_mod
+
+__all__ = ["DecodeResult", "FleetServiceStats", "FleetService"]
+
+
+class DecodeResult(NamedTuple):
+    """One tenant's decoded model + the cache bookkeeping around it."""
+
+    centroids: jax.Array  # (K, n)
+    weights: jax.Array  # (K,)
+    cost: jax.Array  # sketch-domain objective of the decode
+    version: int  # tenant state version the decode corresponds to
+    cached: bool  # True when served from the LRU
+
+
+@dataclasses.dataclass
+class FleetServiceStats:
+    requests: int = 0  # (tenant, batch) requests folded in
+    points: int = 0  # data points folded in
+    flushes: int = 0  # ingest dispatches into the stacked state
+    decodes: int = 0  # decode calls answered
+    decode_hits: int = 0  # served from the LRU
+    decode_misses: int = 0  # freshly decoded
+    evictions: int = 0
+    restores: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.decode_hits / self.decodes if self.decodes else 0.0
+
+
+class FleetService:
+    """Multi-tenant sketch service over one stacked FleetEngine state.
+
+    Parameters
+    ----------
+    engine : the :class:`~repro.core.fleet.FleetEngine` holding the fleet.
+    decode_config : ``CKMConfig`` used for every decode (``decoder`` defaults
+        to ``"sketch_shift"`` when the caller leaves the CKMConfig default
+        ``"clompr"`` untouched — pass an explicit decoder to override).
+    decode_cache_entries : LRU capacity in decoded models (0 disables).
+    checkpoint_dir : directory for per-tenant eviction checkpoints (required
+        by :meth:`evict`).
+    decode_key : PRNG key for decoder inits; tenant t decodes under
+        ``fold_in(decode_key, t)`` so decodes are deterministic per tenant.
+    """
+
+    def __init__(
+        self,
+        engine: fleet_mod.FleetEngine,
+        decode_config: ckm_mod.CKMConfig,
+        *,
+        decode_cache_entries: int = 256,
+        checkpoint_dir: str | Path | None = None,
+        decode_key: jax.Array | None = None,
+    ):
+        self.engine = engine
+        if decode_config.decoder == "clompr":
+            decode_config = dataclasses.replace(
+                decode_config, decoder="sketch_shift"
+            )
+        self.decode_config = decode_config
+        self.state = engine.init_state()
+        self.decode_cache_entries = int(decode_cache_entries)
+        self.checkpoint_dir = (
+            Path(checkpoint_dir) if checkpoint_dir is not None else None
+        )
+        self.decode_key = (
+            decode_key if decode_key is not None else jax.random.PRNGKey(0)
+        )
+        self.stats = FleetServiceStats()
+        self._versions = np.zeros(engine.n_tenants, np.int64)
+        self._cache: OrderedDict[tuple[int, int], DecodeResult] = OrderedDict()
+        self._pending: list[tuple[int, np.ndarray]] = []
+        self._evicted: set[int] = set()
+
+    # -- versions -----------------------------------------------------------
+
+    def version(self, tenant: int) -> int:
+        """Monotone per-tenant write counter — the decode-cache key half."""
+        return int(self._versions[tenant])
+
+    def _touch(self, tenants: Iterable[int]):
+        for t in set(int(t) for t in tenants):
+            self._versions[t] += 1
+
+    # -- ingest -------------------------------------------------------------
+
+    def submit(self, tenant: int, batch) -> None:
+        """Queue one ``(tenant, (B, n) batch)`` request for the next flush."""
+        t = int(tenant)
+        if not 0 <= t < self.engine.n_tenants:
+            raise ValueError(
+                f"tenant {t} out of range [0, {self.engine.n_tenants})"
+            )
+        self._pending.append((t, batch))
+
+    def flush(self, *, async_ingest: bool = False, prefetch: int = 2) -> int:
+        """Fold every queued request into the stacked state; returns the
+        number of requests folded.
+
+        Requests are folded in arrival order (the bitwise tenant-isolation
+        contract).  Consecutive requests sharing a batch shape are routed as
+        ONE segment-scatter dispatch; ``async_ingest=True`` threads the
+        request stream through ``core.ingest.prefetched`` so host->device
+        staging of batch r+1 overlaps the fold of batch r.
+        """
+        pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        for t, _ in pending:
+            if t in self._evicted:
+                self.restore(t)
+
+        def requests():
+            for t, b in pending:
+                yield t, jnp.asarray(b, jnp.float32)
+
+        stream: Iterable = requests()
+        if async_ingest:
+            stream = ingest_mod.prefetched(
+                requests(),
+                prefetch,
+                place=lambda tb: (tb[0], jax.device_put(tb[1])),
+            )
+
+        group_ids: list[int] = []
+        group_batches: list[jax.Array] = []
+
+        def dispatch():
+            if not group_ids:
+                return
+            self.state = self.engine.ingest(
+                self.state, np.asarray(group_ids), jnp.stack(group_batches)
+            )
+            self.stats.flushes += 1
+            group_ids.clear()
+            group_batches.clear()
+
+        for t, b in stream:
+            if group_batches and b.shape != group_batches[0].shape:
+                dispatch()  # ragged boundary: keep arrival order intact
+            group_ids.append(t)
+            group_batches.append(b)
+            self.stats.requests += 1
+            self.stats.points += int(b.shape[0])
+        dispatch()
+        self._touch(t for t, _ in pending)
+        return len(pending)
+
+    def ingest(self, tenant_ids, batches, *, async_ingest: bool = False) -> int:
+        """Submit + flush in one call (aligned request arrays or lists)."""
+        for t, b in zip(tenant_ids, batches):
+            self.submit(int(t), b)
+        return self.flush(async_ingest=async_ingest)
+
+    def merge_partial(self, tenant: int, partial) -> None:
+        """Fold an externally produced partial state (edge sketcher, another
+        host's engine) into one tenant's row — monoid merge, versioned."""
+        t = int(tenant)
+        if t in self._evicted:
+            self.restore(t)
+        self.state = self.engine.merge_tenant(self.state, t, partial)
+        self._touch([t])
+
+    # -- decode-on-demand ---------------------------------------------------
+
+    def decode(self, tenant: int, *, use_cache: bool = True) -> DecodeResult:
+        """Centroids for one tenant, from its sketch alone (O(m) state read +
+        one decode), memoised on ``(tenant, version)``."""
+        t = int(tenant)
+        if t in self._evicted:
+            self.restore(t)
+        self.stats.decodes += 1
+        key = (t, self.version(t))
+        if use_cache and key in self._cache:
+            self._cache.move_to_end(key)
+            self.stats.decode_hits += 1
+            return self._cache[key]._replace(cached=True)
+        self.stats.decode_misses += 1
+        z, lo, hi = self.engine.finalize_tenant(self.state, t)
+        cents, alphas, cost = ckm_mod.decode_sketch(
+            jax.random.fold_in(self.decode_key, t),
+            z,
+            self.engine.operator(t),
+            lo,
+            hi,
+            self.decode_config,
+        )
+        result = DecodeResult(cents, alphas, cost, key[1], cached=False)
+        if use_cache and self.decode_cache_entries > 0:
+            self._cache[key] = result
+            self._cache.move_to_end(key)
+            while len(self._cache) > self.decode_cache_entries:
+                self._cache.popitem(last=False)
+        return result
+
+    def cache_len(self) -> int:
+        return len(self._cache)
+
+    # -- evict / restore ----------------------------------------------------
+
+    def _checkpointer(self, tenant: int) -> Checkpointer:
+        if self.checkpoint_dir is None:
+            raise ValueError(
+                "FleetService needs checkpoint_dir= to evict/restore tenants"
+            )
+        return Checkpointer(self.checkpoint_dir / f"tenant_{tenant:06d}")
+
+    def evict(self, tenant: int) -> None:
+        """Checkpoint a cold tenant's row (state + operator spec) and reset
+        the row to the monoid identity — its fleet slot is reusable scratch
+        until the tenant returns."""
+        t = int(tenant)
+        if t in self._evicted:
+            return
+        spec = self.engine.specs[t]
+        if spec is None:
+            raise ValueError(
+                f"tenant {t} has no operator spec; eviction checkpoints the "
+                "spec, not the operator leaves"
+            )
+        row = self.engine.tenant_state(self.state, t)
+        ckpt = self._checkpointer(t)
+        ckpt.save(
+            self.version(t),
+            row,
+            meta={
+                "tenant": t,
+                "version": self.version(t),
+                "freq_op_spec": list(spec),
+                "quantized_bits": self.engine.bits,
+            },
+        )
+        self.state = self.engine.reset_tenant(self.state, t)
+        self._evicted.add(t)
+        self.stats.evictions += 1
+
+    def restore(self, tenant: int) -> None:
+        """Load the latest eviction checkpoint back into the tenant's row.
+
+        The stored spec must match the fleet's (the checkpoint is the
+        tenant's identity, not just its numbers); the state row is restored
+        bitwise and the version rewinds to the evicted one, so decodes
+        cached before eviction become valid again.
+        """
+        t = int(tenant)
+        if t not in self._evicted:
+            return
+        ckpt = self._checkpointer(t)
+        like = self.engine.tenant_engine(t).init_state()
+        row = ckpt.restore(like)
+        meta = ckpt.read_meta()
+        spec = self.engine.specs[t]
+        stored = meta.get("freq_op_spec")
+        if stored is not None and spec is not None:
+            stored_spec = type(spec)(
+                *[tuple(v) if isinstance(v, list) else v for v in stored]
+            )
+            if stored_spec != spec:
+                raise ValueError(
+                    f"tenant {t} checkpoint spec {stored_spec} does not match "
+                    f"the fleet's {spec}"
+                )
+        if meta.get("quantized_bits") != self.engine.bits:
+            raise ValueError(
+                f"tenant {t} checkpoint was written at "
+                f"{meta.get('quantized_bits')} bits, fleet runs "
+                f"{self.engine.bits}"
+            )
+        self.state = self.engine.set_tenant(self.state, t, row)
+        self._versions[t] = int(meta.get("version", self.version(t)))
+        self._evicted.discard(t)
+        self.stats.restores += 1
+
+    @property
+    def evicted(self) -> frozenset[int]:
+        return frozenset(self._evicted)

@@ -9,8 +9,8 @@ The docs site promises three kinds of integrity, enforced here in tier-1:
 2. every dotted ``repro.*`` name mentioned in backticks imports — module
    path plus attribute chain — so the docs cannot name a symbol that was
    renamed away;
-3. every backticked ``CKMConfig.<field>`` is a real config field (the kind
-   of drift PR-sized refactors create).
+3. every backticked ``CKMConfig.<field>`` or ``SketchJobSpec.<field>`` is a
+   real config field (the kind of drift PR-sized refactors create).
 """
 
 import dataclasses
@@ -29,6 +29,7 @@ _HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 _CODE_SPAN = re.compile(r"`([^`\n]+)`")
 _REPRO_NAME = re.compile(r"^repro(\.[A-Za-z_]\w*)+$")
 _CFG_FIELD = re.compile(r"^CKMConfig\.(\w+)$")
+_JOBSPEC_FIELD = re.compile(r"^SketchJobSpec\.(\w+)$")
 _FENCE = re.compile(r"```.*?```", re.DOTALL)
 
 
@@ -104,6 +105,15 @@ def test_named_public_symbols_exist(path):
             fields = {f.name for f in dataclasses.fields(CKMConfig)}
             if m.group(1) not in fields:
                 problems.append(f"`{span}`: CKMConfig has no field {m.group(1)!r}")
+        m = _JOBSPEC_FIELD.match(token)
+        if m:
+            from repro.launch.specs import SketchJobSpec
+
+            fields = {f.name for f in dataclasses.fields(SketchJobSpec)}
+            if m.group(1) not in fields:
+                problems.append(
+                    f"`{span}`: SketchJobSpec has no field {m.group(1)!r}"
+                )
     assert not problems, f"{path.name}:\n" + "\n".join(problems)
 
 
