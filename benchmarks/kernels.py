@@ -512,6 +512,65 @@ def run_fleet(results: dict, n_tenants=1024, batch=32, feat=8, m=64):
     return results
 
 
+def run_obs_overhead(
+    results: dict, n_pts=4096, feat=16, m=1024, inner=40, trials=7
+):
+    """Disabled-telemetry tax on the hot path (ISSUE 8 acceptance).
+
+    ``SketchEngine.update`` with telemetry OFF is one module-attribute read +
+    branch in front of the raw fold; this row times the instrumented update
+    against a direct ``_merge_states(state, _partial_state(batch))`` loop —
+    the exact code the guard falls through to — min-of-``trials`` over
+    ``inner``-call loops, the two paths alternated so machine-load drift
+    cannot bias one side.  Acceptance: the guard costs <= 2%.
+    """
+    from repro import obs
+
+    obs.disable()
+    kx, kw = jax.random.split(jax.random.PRNGKey(23))
+    x = jax.random.normal(kx, (n_pts, feat))
+    w = jax.random.normal(kw, (feat, m))
+    eng = eng_mod.SketchEngine(w, "xla")
+    state0 = eng.init_state()
+
+    def raw_step(s):
+        return eng_mod._merge_states(s, eng._partial_state(x, None))
+
+    def obs_step(s):
+        return eng.update(s, x)
+
+    jax.block_until_ready(raw_step(state0))  # compile both paths
+    jax.block_until_ready(obs_step(state0))
+
+    def trial(step):
+        s = state0
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            s = step(s)
+        jax.block_until_ready(s)
+        return (time.perf_counter() - t0) / inner
+
+    t_raw, t_obs = float("inf"), float("inf")
+    for _ in range(trials):
+        t_raw = min(t_raw, trial(raw_step))
+        t_obs = min(t_obs, trial(obs_step))
+    overhead = (t_obs - t_raw) / t_raw
+    results["obs_overhead"] = {
+        "n": feat,
+        "m": m,
+        "batch": n_pts,
+        "raw_update_seconds": t_raw,
+        "guarded_update_seconds": t_obs,
+        "overhead_frac": overhead,
+        "meets_2pct_acceptance": bool(overhead <= 0.02),
+    }
+    csv_line(
+        f"obs_overhead_N{n_pts}_m{m}", t_obs,
+        f"raw={t_raw*1e6:.1f}us;overhead={overhead*100:.2f}%",
+    )
+    return results
+
+
 def run_topologies(results: dict, p=8, n_pts=16384, feat=16, m=1024):
     """Per-topology merge rows: latency of reducing ``p`` quantized partial
     states through every registered schedule, the alpha-beta wire cost model
@@ -637,6 +696,7 @@ def run(full: bool = False):
     run_ingest(results)
     run_topologies(results)
     run_fleet(results)
+    run_obs_overhead(results)
     save("kernels", results)
     # Acceptance checked AFTER save so a perf flake on a loaded machine
     # cannot discard the other rows computed in the same invocation.
@@ -651,6 +711,13 @@ def run(full: bool = False):
         f"fleet stacked update speedup {fu['speedup']:.1f}x < 5x acceptance "
         f"(stacked {fu['stacked_seconds']:.3f}s, "
         f"looped {fu['looped_seconds']:.3f}s)"
+    )
+    oo = results["obs_overhead"]
+    assert oo["meets_2pct_acceptance"], (
+        f"disabled-telemetry engine.update overhead "
+        f"{oo['overhead_frac']*100:.2f}% > 2% acceptance "
+        f"(raw {oo['raw_update_seconds']*1e6:.1f}us, "
+        f"guarded {oo['guarded_update_seconds']*1e6:.1f}us)"
     )
     return results
 

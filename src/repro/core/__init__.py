@@ -20,6 +20,7 @@ from repro.core.ckm import (
     compute_sketch,
     compute_sketch_streaming,
     decode_sketch,
+    diagnose,
     fit,
     fit_streaming,
     predict,
@@ -66,6 +67,7 @@ __all__ = [
     "compute_sketch",
     "compute_sketch_streaming",
     "decode_sketch",
+    "diagnose",
     "fit",
     "fit_streaming",
     "predict",

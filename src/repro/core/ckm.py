@@ -126,6 +126,14 @@ class CKMConfig:
     amp_damp: float = 0.3  # damping on the message updates (1 = undamped)
     amp_polish_steps: int = 600  # joint (C, alpha) Adam after the loop
     amp_impl: str = "xla"  # amp_denoise kernel impl: "xla" | "pallas"
+    # Decoder convergence tracing: thread ``trace=True`` into the decoder
+    # config, so the decode also returns its per-iteration trajectory
+    # (CLOMPR/sketch_shift: residual norms; amp: unexplained energy +
+    # posterior variance).  ``decode_sketch`` emits the selected replicate's
+    # series through ``repro.obs.trace`` — and flips this flag on by itself
+    # when telemetry is enabled (host-side calls only; the traced buffers
+    # are dead-code-eliminated whenever the flag is off).
+    trace_convergence: bool = False
 
     def sketch_size(self, n: int) -> int:
         return self.m if self.m is not None else 10 * self.k * n
@@ -142,6 +150,7 @@ class CKMConfig:
             init=self.init,
             dedup_radius_scale=self.shift_dedup_scale,
             impl=self.shift_impl,
+            trace=self.trace_convergence,
         )
 
     def amp_config(self) -> AMPConfig:
@@ -154,6 +163,7 @@ class CKMConfig:
             polish_lr=self.joint_lr,
             init=self.init,
             impl=self.amp_impl,
+            trace=self.trace_convergence,
         )
 
     def clompr_config(self) -> CLOMPRConfig:
@@ -168,6 +178,7 @@ class CKMConfig:
             atom_restarts=self.atom_restarts,
             final_steps=self.final_steps,
             merge_radius_scale=self.merge_radius_scale,
+            trace=self.trace_convergence,
         )
 
 
@@ -328,24 +339,58 @@ def decode_sketch(
     Together these make replicate selection monotone for every decoder: more
     replicates can never return a higher cost (all registry decoders report
     the same objective (4)).
+
+    Convergence tracing: when ``cfg.trace_convergence`` is set — or telemetry
+    is enabled (``repro.obs``) and this is a host-side call (``z`` not a
+    tracer) — the decoder runs with its ``trace`` flag on and the selected
+    replicate's trajectory is emitted as ``decoder.<name>.<series>`` events
+    on the default tracer.  The return contract stays ``(centroids, weights,
+    cost)`` either way.
     """
+    from repro.obs import runtime as obs_rt
+
     w = fo.as_operator(w)
-    decode = dec_mod.get_decoder(cfg.decoder)
-    keys = jnp.stack(
-        [jax.random.fold_in(key, r) for r in range(cfg.replicates)]
+    trace_on = cfg.trace_convergence
+    if not trace_on and obs_rt.ENABLED and not isinstance(z, jax.core.Tracer):
+        trace_on = True
+    run_cfg = (
+        cfg
+        if trace_on == cfg.trace_convergence
+        else dataclasses.replace(cfg, trace_convergence=trace_on)
     )
-    if cfg.replicates == 1:
-        return decode(keys[0], z, w, lower, upper, cfg, x_init)
-    if x_init is None:
-        cents, alphas, costs = jax.lax.map(
-            lambda k_: decode(k_, z, w, lower, upper, cfg), keys
+    decode = dec_mod.get_decoder(run_cfg.decoder)
+    keys = jnp.stack(
+        [jax.random.fold_in(key, r) for r in range(run_cfg.replicates)]
+    )
+    if run_cfg.replicates == 1:
+        out = decode(keys[0], z, w, lower, upper, run_cfg, x_init)
+    elif x_init is None:
+        out = jax.lax.map(
+            lambda k_: decode(k_, z, w, lower, upper, run_cfg), keys
         )
     else:
-        cents, alphas, costs = jax.lax.map(
-            lambda k_: decode(k_, z, w, lower, upper, cfg, x_init), keys
+        out = jax.lax.map(
+            lambda k_: decode(k_, z, w, lower, upper, run_cfg, x_init), keys
         )
-    best = jnp.argmin(costs)
-    return cents[best], alphas[best], costs[best]
+    # A tracing decoder returns (cents, alphas, cost, {series}); one with no
+    # trace support (or trace off) returns the plain 3-tuple.
+    traces = out[3] if len(out) == 4 else None
+    cents, alphas, costs = out[0], out[1], out[2]
+    if run_cfg.replicates > 1:
+        best = jnp.argmin(costs)
+        cents, alphas, costs = cents[best], alphas[best], costs[best]
+        if traces is not None:
+            traces = {name: vals[best] for name, vals in traces.items()}
+    if traces is not None and not isinstance(costs, jax.core.Tracer):
+        from repro.obs import trace as obs_trace
+
+        for name, vals in traces.items():
+            obs_trace.series(
+                f"decoder.{run_cfg.decoder}.{name}",
+                jnp.asarray(vals),
+                decoder=run_cfg.decoder,
+            )
+    return cents, alphas, costs
 
 
 def fit(key: jax.Array, x: jax.Array, cfg: CKMConfig, mesh=None) -> CKMResult:
@@ -375,6 +420,18 @@ def fit_streaming(
     x_init = first if cfg.init in ("sample", "kpp") else None
     cents, alphas, cost = decode_sketch(k_dec, z, op, lo, hi, cfg, x_init)
     return CKMResult(cents, alphas, cost, sigma2, op, z, (lo, hi))
+
+
+def diagnose(result: CKMResult, **kwargs):
+    """Attribute a (possibly bad) fit to sketch size m, frequency scale
+    sigma, or the decoder — ``repro.obs.diagnose.diagnose`` re-exported at
+    the pipeline API (``ckm.diagnose(ckm.fit(...))``).  Data-free: the probe
+    decodes run on the result's own sketch; see the full parameter list and
+    the verdict semantics in :mod:`repro.obs.diagnose`.
+    """
+    from repro.obs.diagnose import diagnose as obs_diagnose
+
+    return obs_diagnose(result, **kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,13 @@ class AMPConfig:
     alpha_floor: float = 0.05
     noise_floor: float = 1e-8  # floor on the output-channel noise variance
     impl: str = "xla"  # amp_denoise kernel impl: "xla" | "pallas" (ops.py)
+    # Convergence tracing: when True the decoder also returns
+    # ``{"unexplained_energy": (iters,), "posterior_variance": (iters,)}`` —
+    # the output-channel noise level v and the damped input-channel variance
+    # q_x per GAMP iteration (the damping trajectory).  Buffers are carried
+    # unconditionally (XLA drops them when unused), so the default path is
+    # bitwise the untraced decoder.
+    trace: bool = False
 
 
 def _wrap(x):
@@ -143,8 +150,8 @@ def cl_amp(
         alpha = nnls_mod.nnls(a.T, z, jnp.ones((k,), bool), iters=iters)
         return alpha / jnp.maximum(jnp.sum(alpha), 1e-20)
 
-    def gamp_iter(_, carry):
-        cents, s_mat, q_x, alpha = carry
+    def gamp_iter(t, carry):
+        cents, s_mat, q_x, alpha, v_trace, qx_trace = carry
         # -- linear stage out: pseudo-measurement means with Onsager term.
         q_p = jnp.maximum(q_x * anorm2 / m, 1e-12)
         p_mat = jnp.asarray(w.apply(cents), jnp.float32) - q_p * s_mat
@@ -191,14 +198,18 @@ def cl_amp(
         q_x = jnp.maximum(jnp.mean(v_new), 1e-12)
 
         alpha = refresh_alpha(cents, cfg.inner_nnls_iters)
-        return cents, s_mat, q_x, alpha
+        v_trace = v_trace.at[t].set(v)
+        qx_trace = qx_trace.at[t].set(q_x)
+        return cents, s_mat, q_x, alpha, v_trace, qx_trace
 
     cents0 = estimates_init(key)
     s0 = jnp.zeros((k, m), jnp.float32)
     q_x0 = jnp.mean(span * span) / 12.0  # variance of the box prior
     alpha0 = jnp.full((k,), 1.0 / k, jnp.float32)
-    cents, _, _, alpha = jax.lax.fori_loop(
-        0, cfg.iters, gamp_iter, (cents0, s0, q_x0, alpha0)
+    v_trace0 = jnp.zeros((cfg.iters,), jnp.float32)
+    qx_trace0 = jnp.zeros((cfg.iters,), jnp.float32)
+    cents, _, _, alpha, v_trace, qx_trace = jax.lax.fori_loop(
+        0, cfg.iters, gamp_iter, (cents0, s0, q_x0, alpha0, v_trace0, qx_trace0)
     )
 
     # -- Polish: final weights + short joint descent on the shared objective,
@@ -228,6 +239,11 @@ def cl_amp(
 
     cost = common.residual_cost(z, cents, alpha, w)
     wsum = jnp.maximum(jnp.sum(alpha), 1e-20)
+    if cfg.trace:
+        return cents, alpha / wsum, cost, {
+            "unexplained_energy": v_trace,
+            "posterior_variance": qx_trace,
+        }
     return cents, alpha / wsum, cost
 
 

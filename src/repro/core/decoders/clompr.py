@@ -77,6 +77,12 @@ class CLOMPRConfig:
     # one Gaussian sit ~2 stds apart, while paper-regime clusters are >=4-6
     # stds apart.
     merge_radius_scale: float = 2.5
+    # Convergence tracing: when True the decoder also returns
+    # ``{"residual_norm": (2K,)}`` — ||r|| after each outer iteration (one
+    # atom added per entry).  The buffer is carried unconditionally and
+    # dead-code-eliminated by XLA when False, so the default path's numerics
+    # (and its jit graph) are bitwise those of the untraced decoder.
+    trace: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +171,7 @@ def clompr(
         return (alpha * maskf) @ a
 
     def outer(t, carry):
-        s_buf, alpha, mask, r, key = carry
+        s_buf, alpha, mask, r, key, res_trace = carry
         key, k1 = jax.random.split(key)
 
         # -- Step 1+2: find a new centroid, expand support into the free slot.
@@ -221,13 +227,17 @@ def clompr(
 
         # -- Residual update.
         r = z - model(s_buf, alpha, mask)
-        return s_buf, alpha, mask, r, key
+        res_trace = res_trace.at[t].set(jnp.linalg.norm(r))
+        return s_buf, alpha, mask, r, key, res_trace
 
     s_buf0 = jnp.zeros((kp1, n), jnp.float32)
     alpha0 = jnp.zeros((kp1,), jnp.float32)
     mask0 = jnp.zeros((kp1,), bool)
-    carry = (s_buf0, alpha0, mask0, z, key)
-    s_buf, alpha, mask, r, _ = jax.lax.fori_loop(0, 2 * cfg.k, outer, carry)
+    res_trace0 = jnp.zeros((2 * cfg.k,), jnp.float32)
+    carry = (s_buf0, alpha0, mask0, z, key, res_trace0)
+    s_buf, alpha, mask, r, _, res_trace = jax.lax.fori_loop(
+        0, 2 * cfg.k, outer, carry
+    )
 
     # Final polish: one long joint descent (Matlab runs step 5 to convergence).
     if cfg.final_steps > 0:
@@ -254,6 +264,8 @@ def clompr(
     weights = jnp.where(mask, alpha, 0.0)[order][: cfg.k]
     wsum = jnp.maximum(jnp.sum(weights), 1e-20)
     cost = jnp.sum(r * r)
+    if cfg.trace:
+        return centroids, weights / wsum, cost, {"residual_norm": res_trace}
     return centroids, weights / wsum, cost
 
 

@@ -81,6 +81,11 @@ class SketchShiftConfig:
     # mode and <= 1 everywhere.
     density_floor: float = 1e-3
     impl: str = "xla"  # score/shift kernel: "xla" | "pallas" (ops.py)
+    # Convergence tracing: when True the decoder also returns
+    # ``{"residual_norm": (K,)}`` — ||r|| after each deflation round.  The
+    # buffer is carried unconditionally (XLA drops it when unused), so the
+    # default path is bitwise the untraced decoder.
+    trace: bool = False
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -155,7 +160,7 @@ def sketch_shift(
         return body
 
     def round_(t, carry):
-        s_buf, alpha, r, key = carry
+        s_buf, alpha, r, key, res_trace = carry
         key, k_round = jax.random.split(key)
 
         # -- Mean-shift swarm on the residual density: collapse onto the
@@ -179,12 +184,14 @@ def sketch_shift(
         a = sk.atoms(s_buf, w)  # (K, 2m)
         alpha = nnls_mod.nnls(a.T, z, mask, iters=cfg.nnls_iters)
         r = z - (alpha * mask.astype(jnp.float32)) @ a
-        return s_buf, alpha, r, key
+        res_trace = res_trace.at[t].set(jnp.linalg.norm(r))
+        return s_buf, alpha, r, key, res_trace
 
     s_buf0 = jnp.zeros((k, n), jnp.float32)
     alpha0 = jnp.zeros((k,), jnp.float32)
-    s_buf, alpha, _, _ = jax.lax.fori_loop(
-        0, k, round_, (s_buf0, alpha0, z, key)
+    res_trace0 = jnp.zeros((k,), jnp.float32)
+    s_buf, alpha, _, _, res_trace = jax.lax.fori_loop(
+        0, k, round_, (s_buf0, alpha0, z, key, res_trace0)
     )
     cents = s_buf
 
@@ -212,6 +219,8 @@ def sketch_shift(
 
     cost = common.residual_cost(z, cents, alpha, w)
     wsum = jnp.maximum(jnp.sum(alpha), 1e-20)
+    if cfg.trace:
+        return cents, alpha / wsum, cost, {"residual_norm": res_trace}
     return cents, alpha / wsum, cost
 
 

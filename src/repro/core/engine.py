@@ -77,12 +77,14 @@ from typing import Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import freq_ops as fo
 from repro.core import quantize as qz
 from repro.core import sketch as sk
 from repro.core import topology as topo
+from repro.obs import runtime as obs_rt
 from repro.parallel.sharding import axis_extent
 from repro.utils import compat
 
@@ -125,6 +127,28 @@ class QuantizedSketchEngineState(NamedTuple):
     lower: jax.Array  # (n,) f32 — running per-coordinate min
     upper: jax.Array  # (n,) f32 — running per-coordinate max
     count: jax.Array  # () f32 — number of points folded in
+
+
+class _EngineInstruments(NamedTuple):
+    """Per-engine cached metric handles (resolved once per registry
+    generation, so the enabled steady state is plain ``float +=``)."""
+
+    gen: int
+    update_calls: object
+    update_rows: object
+    merge_calls: object
+    finalize_calls: object
+    state_bytes: object
+
+
+def _state_nbytes(state) -> int:
+    """Bytes of a state's array leaves — what a partial ships on merge."""
+    return int(
+        sum(
+            int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+            for leaf in state
+        )
+    )
 
 
 @jax.jit
@@ -238,6 +262,31 @@ class SketchEngine:
                 f"{(self.m,)}"
             )
         self.quantizer = quantizer
+        self._obs_h: _EngineInstruments | None = None
+
+    def _obs(self) -> _EngineInstruments:
+        """Resolve (or re-resolve after a registry reset) the engine's
+        cached instrument handles.  Only reached when telemetry is on."""
+        from repro.obs import metrics as obs_metrics
+
+        h = self._obs_h
+        gen = obs_metrics.REGISTRY.generation
+        if h is None or h.gen != gen:
+            bits = (
+                str(self.quantizer.bits) if self.quantizer is not None else "none"
+            )
+            labels = dict(backend=self.backend, bits=bits)
+            h = self._obs_h = _EngineInstruments(
+                gen=gen,
+                update_calls=obs_metrics.counter("engine.update.calls", **labels),
+                update_rows=obs_metrics.counter("engine.update.rows", **labels),
+                merge_calls=obs_metrics.counter("engine.merge.calls", **labels),
+                finalize_calls=obs_metrics.counter(
+                    "engine.finalize.calls", **labels
+                ),
+                state_bytes=obs_metrics.gauge("engine.state.bytes", **labels),
+            )
+        return h
 
     @property
     def w(self) -> jax.Array:
@@ -273,11 +322,8 @@ class SketchEngine:
             count=jnp.zeros((), jnp.float32),
         )
 
-    def update(self, state, batch: jax.Array, weights: jax.Array | None = None):
-        """Fold ``batch: (B, n)`` into ``state``.  ``weights`` default to 1
-        per point, so streaming batches of any size weight points equally.
-        The quantized state transform only represents unit weights (integer
-        code counts) and rejects explicit ``weights``."""
+    def _partial_state(self, batch: jax.Array, weights: jax.Array | None):
+        """One batch -> one partial state (the pre-merge half of update)."""
         x = jnp.asarray(batch, jnp.float32)
         b = x.shape[0]
         if self.quantizer is not None:
@@ -286,18 +332,44 @@ class SketchEngine:
                     "quantized sketch states accumulate unit-weight integer "
                     "counts; per-point weights are not representable"
                 )
-            part = self._quantized_batch_state(x)
+            return self._quantized_batch_state(x)
+        if weights is None:
+            weights = jnp.ones((b,), jnp.float32)
         else:
-            if weights is None:
-                weights = jnp.ones((b,), jnp.float32)
-            else:
-                weights = jnp.asarray(weights, jnp.float32)
-            part = self._batch_state(x, weights)
-        return _merge_states(state, part)
+            weights = jnp.asarray(weights, jnp.float32)
+        return self._batch_state(x, weights)
+
+    def update(self, state, batch: jax.Array, weights: jax.Array | None = None):
+        """Fold ``batch: (B, n)`` into ``state``.  ``weights`` default to 1
+        per point, so streaming batches of any size weight points equally.
+        The quantized state transform only represents unit weights (integer
+        code counts) and rejects explicit ``weights``."""
+        if not obs_rt.ENABLED:
+            return _merge_states(state, self._partial_state(batch, weights))
+        from repro.obs import trace as obs_trace
+
+        h = self._obs()
+        with obs_trace.span("engine.update", backend=self.backend):
+            part = self._partial_state(batch, weights)
+            with obs_trace.span("engine.merge", backend=self.backend):
+                out = _merge_states(state, part)
+        h.update_calls.inc()
+        h.update_rows.inc(float(np.shape(batch)[0]))
+        h.merge_calls.inc()
+        h.state_bytes.set(_state_nbytes(out))
+        return out
 
     def merge(self, a, b):
         """Associative + commutative combine of two partial states."""
-        return _merge_states(a, b)
+        if not obs_rt.ENABLED:
+            return _merge_states(a, b)
+        from repro.obs import trace as obs_trace
+
+        h = self._obs()
+        with obs_trace.span("engine.merge", backend=self.backend):
+            out = _merge_states(a, b)
+        h.merge_calls.inc()
+        return out
 
     def reduce_partials(self, states, topology: str | None = None):
         """Reduce many partial states through a named merge schedule.
@@ -319,6 +391,17 @@ class SketchEngine:
         rotation, ``core.quantize.dequantize_sums``) so every consumer sees
         the same float-sketch contract regardless of the state transform.
         """
+        if not obs_rt.ENABLED:
+            return self._finalize_impl(state)
+        from repro.obs import trace as obs_trace
+
+        h = self._obs()
+        with obs_trace.span("engine.finalize", backend=self.backend):
+            out = self._finalize_impl(state)
+        h.finalize_calls.inc()
+        return out
+
+    def _finalize_impl(self, state):
         if self.quantizer is not None:
             # int32 code sums wrap silently once count * scale exceeds the
             # int32 range — detect post-hoc from the (non-wrapping) f32 count

@@ -48,6 +48,8 @@ from typing import Any, Iterator, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.obs import runtime as obs_rt
+
 __all__ = [
     "BatchSource",
     "IngestStats",
@@ -100,6 +102,29 @@ class IngestStats:
             return 0.0
         hidden = self.produce_s + self.compute_s - self.wall_s
         return max(0.0, min(1.0, hidden / hideable))
+
+    def emit_metrics(self, *, resident_batches: int | None = None) -> None:
+        """Publish this run's accounting through ``repro.obs.metrics``.
+
+        Called by :func:`ingest_stream` when telemetry is enabled, so
+        async-ingest regressions (overlap collapsing, stall time growing)
+        show up on the ``ingest.*`` instruments without a benchmark run.
+        Counters accumulate across runs; the gauges describe the last run.
+        """
+        from repro.obs import metrics as obs_metrics
+
+        obs_metrics.counter("ingest.batches").inc(self.batches)
+        obs_metrics.counter("ingest.points").inc(self.points)
+        obs_metrics.counter("ingest.produce_s").inc(self.produce_s)
+        obs_metrics.counter("ingest.compute_s").inc(self.compute_s)
+        obs_metrics.counter("ingest.consumer_wait_s").inc(self.consumer_wait_s)
+        obs_metrics.counter("ingest.producer_wait_s").inc(self.producer_wait_s)
+        obs_metrics.counter("ingest.wall_s").inc(self.wall_s)
+        obs_metrics.gauge("ingest.overlap_efficiency").set(
+            self.overlap_efficiency
+        )
+        if resident_batches is not None:
+            obs_metrics.gauge("ingest.resident_batches").set(resident_batches)
 
 
 _DONE = object()
@@ -231,20 +256,28 @@ def ingest_stream(
             lambda s, b: engine.update(s, b), donate_argnums=(0,)
         )
 
-    t_start = time.perf_counter()
-    for batch in prefetched(source, prefetch, place=place, stats=stats):
-        t0 = time.perf_counter()
-        state = update(state, batch)
-        # Block per batch: streaming means a batch is *discarded* once folded
-        # in — without this, JAX's async dispatch would queue arbitrarily
-        # many pending updates (and keep their batch buffers alive) whenever
-        # production outruns compute, silently unbounding the O(m) working
-        # set.  Resident batches stay bounded at prefetch + 2 (queue + this
-        # one + the producer's in-hand batch), and the produce/compute
-        # split in the stats is truthful.
-        jax.block_until_ready(state)
-        stats.compute_s += time.perf_counter() - t0
-        stats.batches += 1
-        stats.points += int(batch.shape[0])
-    stats.wall_s = time.perf_counter() - t_start
+    # The span wraps the whole overlapped pass (the per-batch engine.update
+    # spans nest inside it); the stall/overlap numbers land on the ingest.*
+    # instruments via stats.emit_metrics below.
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.span("ingest.stream", prefetch=prefetch, donate=donate):
+        t_start = time.perf_counter()
+        for batch in prefetched(source, prefetch, place=place, stats=stats):
+            t0 = time.perf_counter()
+            state = update(state, batch)
+            # Block per batch: streaming means a batch is *discarded* once
+            # folded in — without this, JAX's async dispatch would queue
+            # arbitrarily many pending updates (and keep their batch buffers
+            # alive) whenever production outruns compute, silently unbounding
+            # the O(m) working set.  Resident batches stay bounded at
+            # prefetch + 2 (queue + this one + the producer's in-hand batch),
+            # and the produce/compute split in the stats is truthful.
+            jax.block_until_ready(state)
+            stats.compute_s += time.perf_counter() - t0
+            stats.batches += 1
+            stats.points += int(batch.shape[0])
+        stats.wall_s = time.perf_counter() - t_start
+    if obs_rt.ENABLED:
+        stats.emit_metrics(resident_batches=prefetch + 2)
     return state, stats

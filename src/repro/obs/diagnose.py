@@ -1,0 +1,362 @@
+"""Sketch-health diagnostics: blame the sketch, the scale, or the decoder.
+
+"When compressive learning fails" (Schellekens & Jacques, 2020) observes
+that a bad compressive fit has exactly three root causes, and that they are
+distinguishable *from the sketch alone*:
+
+- **sketch size m too small** — the inverse problem is under-determined:
+  the decoder reaches a *small* sketch residual yet the solution is not
+  identifiable.  Signature: probe decodes from disjoint frequency subsets
+  of the same sketch land on wildly different centroid sets.
+- **frequency scale mis-set** — the sketch samples the characteristic
+  function where it carries no information.  Signature: the CF moduli
+  ``|psi(w_j)|`` are ~1 across frequencies (sigma^2 over-estimated: all
+  frequencies inside the central lobe) or at the empirical noise floor
+  (sigma^2 under-estimated: all frequencies past the decay).  O(m) to test.
+- **decoder failure** — the sketch is informative but the decode did not
+  converge.  Signature: a cheap, well-converged probe decode
+  (``sketch_shift`` — the fast decoder the fleet's hot path already uses)
+  reaches a materially lower sketch residual than the result's.
+
+:func:`diagnose` runs those three probes on a ``ckm.CKMResult`` (data-free;
+pass ``sample=`` to add a true re-sketching sigma sweep) and returns a
+:class:`Diagnosis` with a single ``verdict`` plus the scores behind it.
+
+The same CF-fingerprint view gives the **drift score**: the distance between
+a live window's sketch and the decoded model's re-sketched centroids
+(:func:`sketch_drift`) is an O(m) health number every service tier can emit
+as a gauge — ``FleetService.drift`` and ``ActivationMonitor.sketch_drift``
+wire it in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Diagnosis",
+    "diagnose",
+    "model_sketch",
+    "sketch_drift",
+    "matched_distance",
+    "sigma_sweep",
+]
+
+VERDICTS = ("ok", "sketch_size", "frequency_scale", "decoder")
+
+
+@dataclasses.dataclass
+class Diagnosis:
+    """Outcome of :func:`diagnose` — one verdict, with its evidence.
+
+    ``verdict`` is one of ``VERDICTS``; ``scores`` holds the scalar evidence
+    (residuals, CF moduli, subset disagreement); ``details`` the per-probe
+    sweep tables; ``recommendation`` a one-line operator hint.
+    """
+
+    verdict: str
+    scores: dict
+    details: dict
+    recommendation: str
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict == "ok"
+
+
+def model_sketch(centroids, weights, w) -> jax.Array:
+    """Re-sketch a decoded model: ``sum_k alpha_k A delta_{c_k}`` (2m,)."""
+    from repro.core import freq_ops as fo
+    from repro.core import sketch as sk
+
+    op = fo.as_operator(w)
+    return jnp.asarray(weights, jnp.float32) @ sk.atoms(
+        jnp.asarray(centroids, jnp.float32), op
+    )
+
+
+def sketch_drift(z_live, centroids, weights, w) -> float:
+    """O(m) drift score: relative CF distance between a live window's sketch
+    and the decoded model's re-sketched centroids.
+
+    Both the live sketch and the model sketch are normalised characteristic
+    functions, so ``||z_live - z_model|| / ||z_live||`` is scale-free: ~0 on
+    a stationary stream (up to decode residual + O(1/sqrt N) sampling
+    noise), O(1) once the stream moves away from the decoded model.
+    """
+    z_live = jnp.asarray(z_live, jnp.float32)
+    z_model = model_sketch(centroids, weights, w)
+    denom = jnp.maximum(jnp.linalg.norm(z_live), 1e-12)
+    return float(jnp.linalg.norm(z_live - z_model) / denom)
+
+
+def matched_distance(a, b, weights_a=None) -> float:
+    """Greedy-matched mean displacement between two centroid sets.
+
+    Same matching rule as ``ActivationMonitor.drift``: repeatedly pair the
+    globally closest remaining (a_i, b_j), optionally weighting each pair by
+    ``weights_a[i]`` (uniform when omitted).
+    """
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    wa = (
+        np.full((a.shape[0],), 1.0 / a.shape[0])
+        if weights_a is None
+        else np.asarray(weights_a, np.float64)
+    )
+    d = np.linalg.norm(a[:, None] - b[None], axis=-1)
+    moved, used = 0.0, d.copy()
+    for _ in range(a.shape[0]):
+        i, j = np.unravel_index(np.argmin(used), used.shape)
+        moved += wa[i] * d[i, j]
+        used[i, :] = np.inf
+        used[:, j] = np.inf
+    return float(moved / max(wa.sum(), 1e-9))
+
+
+def _rel_residual(z, centroids, weights, w) -> float:
+    r = jnp.asarray(z, jnp.float32) - model_sketch(centroids, weights, w)
+    denom = jnp.maximum(jnp.linalg.norm(jnp.asarray(z)), 1e-12)
+    return float(jnp.linalg.norm(r) / denom)
+
+
+def _default_probe_config(k: int, probe_budget: float):
+    from repro.core import ckm as ckm_mod
+
+    s = max(probe_budget, 0.05)
+    return ckm_mod.CKMConfig(
+        k=k,
+        decoder="sketch_shift",
+        shift_steps=max(int(150 * s), 10),
+        shift_polish_steps=max(int(400 * s), 20),
+        nnls_iters=max(int(150 * s), 10),
+    )
+
+
+def _subsketch(z, w_mat, idx):
+    """Restrict a stacked-real sketch + dense frequency matrix to a subset
+    of frequencies — a *valid smaller sketch of the same data* (each entry
+    samples the CF independently)."""
+    m = w_mat.shape[1]
+    z_sub = jnp.concatenate([z[:m][idx], z[m:][idx]])
+    return z_sub, w_mat[:, idx]
+
+
+def sigma_sweep(
+    sample,
+    result,
+    *,
+    key=None,
+    factors=(0.1, 1.0, 10.0),
+    m_probe: int | None = None,
+) -> list[dict]:
+    """Re-sketch ``sample`` at ``sigma2 = factor * result.sigma2`` and report
+    each scale's CF-modulus health — the data-backed half of the m/sigma
+    sweep harness (the data-free half runs inside :func:`diagnose`).
+
+    Returns one row per factor: ``{factor, sigma2, mean_modulus, healthy}``,
+    where healthy means the moduli land in the informative mid-band.
+    """
+    from repro.core import freq_ops as fo
+    from repro.core import sketch as sk
+    from repro.core.engine import SketchEngine
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x = jnp.asarray(sample, jnp.float32)
+    n = x.shape[1]
+    m = int(m_probe) if m_probe is not None else int(result.freq_op.m)
+    rows = []
+    for i, factor in enumerate(factors):
+        sigma2 = float(result.sigma2) * float(factor)
+        op = fo.make_operator(
+            "dense", jax.random.fold_in(key, i), m, n, jnp.asarray(sigma2)
+        )
+        z, _, _ = SketchEngine(op, "xla").sketch(x)
+        mod = float(jnp.mean(jnp.abs(sk.to_complex(z))))
+        rows.append(
+            {
+                "factor": float(factor),
+                "sigma2": sigma2,
+                "mean_modulus": mod,
+                "healthy": bool(0.05 <= mod <= 0.9),
+            }
+        )
+    return rows
+
+
+def diagnose(
+    result,
+    *,
+    key=None,
+    probe=None,
+    sample=None,
+    probe_budget: float = 1.0,
+    modulus_high: float = 0.9,
+    modulus_low: float = 0.05,
+    decoder_blame_ratio: float = 1.5,
+    decoder_blame_margin: float = 0.05,
+    disagreement_threshold: float = 0.1,
+) -> Diagnosis:
+    """Attribute a (possibly bad) compressive fit to m, sigma, or the decoder.
+
+    Parameters
+    ----------
+    result : a ``ckm.CKMResult`` (``ckm.fit`` / ``fit_streaming`` output; the
+        sketch, operator, bounds and decoded model it carries are all the
+        evidence needed — no data access).
+    key : PRNG key for the probe decodes (default ``PRNGKey(0)``).
+    probe : optional ``CKMConfig`` for the probe decoder (default: a
+        ``sketch_shift`` config scaled by ``probe_budget`` — the cheap
+        decoder, run well-converged).
+    sample : optional ``(N, n)`` data sample; adds the re-sketching
+        :func:`sigma_sweep` rows to ``details``.
+    probe_budget : scale on the default probe's iteration budgets.
+    modulus_high / modulus_low : CF-modulus band outside which the frequency
+        scale is declared mis-set (low is meaningful only while above the
+        empirical noise floor ~``1/sqrt(2N)``; at the default 0.05 that
+        means N >= ~1000).
+    decoder_blame_ratio / decoder_blame_margin : the probe must beat the
+        result's relative residual by both this factor and this absolute
+        margin to blame the decoder.
+    disagreement_threshold : box-normalised matched-centroid disagreement
+        between disjoint half-sketch decodes above which m is blamed.
+
+    Returns a :class:`Diagnosis`.  Verdict precedence: ``frequency_scale``
+    (the sketch itself is uninformative — nothing downstream is meaningful),
+    then ``decoder`` (the sketch supports a better fit than the one
+    reported), then ``sketch_size`` (no decode from this few frequencies is
+    identifiable), else ``ok``.
+    """
+    from repro.core import ckm as ckm_mod
+    from repro.core import sketch as sk
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import runtime as obs_rt
+    from repro.obs import trace as obs_trace
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    z = jnp.asarray(result.sketch, jnp.float32)
+    op = result.freq_op
+    lo, hi = result.bounds
+    k = int(result.centroids.shape[0])
+    m = int(op.m)
+    box_diag = float(
+        jnp.maximum(jnp.linalg.norm(jnp.asarray(hi) - jnp.asarray(lo)), 1e-12)
+    )
+    if probe is None:
+        probe = _default_probe_config(k, probe_budget)
+
+    with obs_trace.span("ckm.diagnose", m=m, k=k):
+        # -- 1. CF-modulus health: O(m), no decode needed. ------------------
+        moduli = jnp.abs(sk.to_complex(z))
+        mean_mod = float(jnp.mean(moduli))
+        norms = op.col_norms()
+        med = jnp.median(norms)
+        low_band = float(jnp.mean(jnp.where(norms <= med, moduli, 0.0))) * 2.0
+        high_band = float(jnp.mean(jnp.where(norms > med, moduli, 0.0))) * 2.0
+        sigma_verdict = None
+        if mean_mod > modulus_high:
+            sigma_verdict = "sigma2_too_large"
+        elif mean_mod < modulus_low:
+            sigma_verdict = "sigma2_too_small"
+
+        # -- 2. Decoder probe: can a converged cheap decode beat the result?
+        rel_res = _rel_residual(z, result.centroids, result.weights, op)
+        k_probe, k_sub = jax.random.split(key)
+        p_cents, p_alpha, _ = ckm_mod.decode_sketch(k_probe, z, op, lo, hi, probe)
+        rel_res_probe = _rel_residual(z, p_cents, p_alpha, op)
+        decoder_blamed = (
+            rel_res > rel_res_probe * decoder_blame_ratio
+            and rel_res > rel_res_probe + decoder_blame_margin
+        )
+
+        # -- 3. m sweep: probe decodes from disjoint half-sketches. ---------
+        # Each half is a valid m/2-sketch of the same data; if the two
+        # halves' decodes disagree, no decode at this m is identifiable.
+        w_mat = op.materialize()
+        perm = jax.random.permutation(k_sub, m)
+        half = max(m // 2, 1)
+        halves = []
+        for s in range(2):
+            idx = perm[s * half : (s + 1) * half]
+            z_s, w_s = _subsketch(z, w_mat, idx)
+            c_s, a_s, _ = ckm_mod.decode_sketch(
+                jax.random.fold_in(k_sub, s), z_s, w_s, lo, hi, probe
+            )
+            halves.append(
+                {
+                    "m": int(idx.shape[0]),
+                    "centroids": np.asarray(c_s),
+                    "rel_residual": _rel_residual(z_s, c_s, a_s, w_s),
+                }
+            )
+        disagreement = matched_distance(
+            halves[0]["centroids"], halves[1]["centroids"]
+        ) / box_diag
+        m_blamed = disagreement > disagreement_threshold
+
+        details: dict = {
+            "sigma_profile": {
+                "mean_modulus": mean_mod,
+                "low_band_modulus": low_band,
+                "high_band_modulus": high_band,
+                "direction": sigma_verdict,
+            },
+            "m_sweep": [
+                {"m": h["m"], "rel_residual": h["rel_residual"]} for h in halves
+            ],
+        }
+        if sample is not None:
+            details["sigma_sweep"] = sigma_sweep(sample, result, key=key)
+
+        scores = {
+            "rel_residual": rel_res,
+            "probe_rel_residual": rel_res_probe,
+            "mean_modulus": mean_mod,
+            "subsketch_disagreement": disagreement,
+            "m_per_kn": m / max(k * int(op.n), 1),
+        }
+
+        if sigma_verdict is not None:
+            verdict = "frequency_scale"
+            recommendation = (
+                "decrease sigma2 (frequencies sample the flat top of the "
+                "characteristic function)"
+                if sigma_verdict == "sigma2_too_large"
+                else "increase sigma2 (frequencies sample past the CF decay "
+                "— the sketch is at the noise floor)"
+            )
+        elif decoder_blamed:
+            verdict = "decoder"
+            recommendation = (
+                "re-decode with a larger iteration budget or another "
+                f"registered decoder (probe reached {rel_res_probe:.3f} "
+                f"relative residual vs the result's {rel_res:.3f})"
+            )
+        elif m_blamed:
+            verdict = "sketch_size"
+            recommendation = (
+                "increase m (disjoint half-sketch decodes disagree by "
+                f"{disagreement:.2f} of the box diagonal — the inverse "
+                "problem is not identifiable at this sketch size)"
+            )
+        else:
+            verdict = "ok"
+            recommendation = "no failure signature detected"
+
+    if obs_rt.ENABLED:
+        obs_metrics.gauge("diagnose.rel_residual").set(rel_res)
+        obs_metrics.gauge("diagnose.subsketch_disagreement").set(disagreement)
+        obs_metrics.gauge("diagnose.mean_modulus").set(mean_mod)
+        obs_metrics.counter("diagnose.verdicts", verdict=verdict).inc()
+        obs_trace.point("diagnose.verdict", VERDICTS.index(verdict), verdict=verdict)
+
+    return Diagnosis(
+        verdict=verdict,
+        scores=scores,
+        details=details,
+        recommendation=recommendation,
+    )

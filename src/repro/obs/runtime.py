@@ -1,0 +1,52 @@
+"""The telemetry master switch — one module-level bool, read on every hot path.
+
+Every instrumented call site guards with ``if runtime.ENABLED:`` *before*
+touching any telemetry object, so the disabled path costs exactly one module
+attribute read and a branch (the ``obs_overhead`` row in
+``experiments/paper/kernels.json`` pins the disabled-path regression at
+<= 2% on the engine-update microbenchmark).  Nothing here is ever traced
+inside ``jit`` — instrumentation happens at the Python dispatch layer, and
+convergence traces are computed *as array outputs* of the jitted decoders
+and emitted host-side (see ``docs/observability.md``).
+
+Call sites must read the flag as an attribute (``runtime.ENABLED``), never
+``from ... import ENABLED`` — a from-import snapshots the value at import
+time and would never see :func:`enable`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["ENABLED", "enable", "disable", "enabled", "enabled_scope"]
+
+ENABLED: bool = False
+
+
+def enable() -> None:
+    """Turn telemetry on process-wide (metrics + tracer + profiler spans)."""
+    global ENABLED
+    ENABLED = True
+
+
+def disable() -> None:
+    """Turn telemetry off; instrumented paths fall back to the bare hot path."""
+    global ENABLED
+    ENABLED = False
+
+
+def enabled() -> bool:
+    """The current switch state (prefer attribute reads on hot paths)."""
+    return ENABLED
+
+
+@contextlib.contextmanager
+def enabled_scope(on: bool = True):
+    """Scoped enable/disable — restores the previous state on exit."""
+    global ENABLED
+    prev = ENABLED
+    ENABLED = on
+    try:
+        yield
+    finally:
+        ENABLED = prev

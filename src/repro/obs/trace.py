@@ -1,0 +1,162 @@
+"""Span tracer with JSONL export and ``jax.profiler`` pass-through.
+
+Three event kinds, all host-side Python (never traced inside ``jit``):
+
+- **spans** — ``with trace.span("engine.update", backend="xla"):`` records a
+  ``(name, t0, duration, depth, attrs)`` event around a region of dispatch
+  code, and enters a ``jax.profiler.TraceAnnotation`` of the same name so the
+  region shows up in TensorBoard/perfetto profiles when a profiler trace is
+  active (a TraceAnnotation is a cheap no-op otherwise);
+- **series** — a named list of floats, e.g. a decoder's per-round residual
+  norms.  The values are computed *inside* the jitted decoder as ordinary
+  array outputs (O(iterations) scalars, dead-code-eliminated when tracing is
+  off) and handed to the tracer after the call — nothing is ever traced into
+  the XLA graph;
+- **points** — one-off ``(name, value, attrs)`` observations.
+
+Like the metrics registry, the tracer is only touched behind a
+``runtime.ENABLED`` guard; ``span()`` double-checks so un-guarded callers
+stay correct, just not free.  Export is JSON Lines: one self-describing
+object per event (``kind``/``name``/``attrs`` plus kind-specific fields),
+parseable with nothing but ``json.loads`` per line.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from pathlib import Path
+
+from repro.obs import runtime
+
+__all__ = ["Tracer", "TRACER", "span", "series", "point", "export_jsonl"]
+
+
+class Tracer:
+    """Append-only event log; one process-wide instance at ``trace.TRACER``."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self._depth = 0
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        """Record a wall-clock span around a block of dispatch-layer code.
+
+        JAX dispatch is asynchronous, so a span around an un-synchronised
+        call measures dispatch, not device compute; paths that block per
+        batch (``fit_streaming``, ``ingest_stream``) give true durations.
+        """
+        if not runtime.ENABLED:
+            yield
+            return
+        import jax
+
+        depth = self._depth
+        self._depth += 1
+        t0 = time.perf_counter()
+        try:
+            with jax.profiler.TraceAnnotation(name):
+                yield
+        finally:
+            self._depth = depth
+            self.events.append(
+                {
+                    "kind": "span",
+                    "name": name,
+                    "t0": t0,
+                    "dur_s": time.perf_counter() - t0,
+                    "depth": depth,
+                    "attrs": attrs,
+                }
+            )
+
+    def series(self, name: str, values, **attrs) -> None:
+        """Record a convergence/trajectory series (list of floats)."""
+        if not runtime.ENABLED:
+            return
+        self.events.append(
+            {
+                "kind": "series",
+                "name": name,
+                "values": [float(v) for v in values],
+                "attrs": attrs,
+            }
+        )
+
+    def point(self, name: str, value: float, **attrs) -> None:
+        """Record a single observation."""
+        if not runtime.ENABLED:
+            return
+        self.events.append(
+            {
+                "kind": "point",
+                "name": name,
+                "value": float(value),
+                "attrs": attrs,
+            }
+        )
+
+    def spans(self, name: str | None = None) -> list[dict]:
+        """Completed span events, optionally filtered by name."""
+        return [
+            e
+            for e in self.events
+            if e["kind"] == "span" and (name is None or e["name"] == name)
+        ]
+
+    def jsonl_lines(self, metrics_snapshot: dict | None = None) -> list[str]:
+        """Every event (plus an optional metrics snapshot) as JSONL lines."""
+        lines = [json.dumps(e) for e in self.events]
+        if metrics_snapshot is not None:
+            for key, value in sorted(metrics_snapshot.items()):
+                lines.append(
+                    json.dumps({"kind": "metric", "name": key, "value": value})
+                )
+        return lines
+
+    def export_jsonl(
+        self, path, *, metrics_snapshot: dict | None = None
+    ) -> Path:
+        """Write the event log (and optional metrics) to a ``.jsonl`` file."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(
+            "\n".join(self.jsonl_lines(metrics_snapshot)) + "\n"
+        )
+        return path
+
+    def reset(self) -> None:
+        self.events.clear()
+        self._depth = 0
+
+
+TRACER = Tracer()
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs):
+    """``with obs.span("name", k=v):`` on the default tracer."""
+    with TRACER.span(name, **attrs):
+        yield
+
+
+def series(name: str, values, **attrs) -> None:
+    """Record a series on the default tracer."""
+    TRACER.series(name, values, **attrs)
+
+
+def point(name: str, value: float, **attrs) -> None:
+    """Record a point observation on the default tracer."""
+    TRACER.point(name, value, **attrs)
+
+
+def export_jsonl(path, *, with_metrics: bool = True) -> Path:
+    """Export the default tracer (and, by default, the metrics snapshot)."""
+    snap = None
+    if with_metrics:
+        from repro.obs import metrics as _metrics
+
+        snap = _metrics.snapshot()
+    return TRACER.export_jsonl(path, metrics_snapshot=snap)

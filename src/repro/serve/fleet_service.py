@@ -26,6 +26,7 @@ decoder the hot decode path wants; any registered decoder name works.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from pathlib import Path
 from typing import Iterable, NamedTuple
@@ -38,6 +39,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import ckm as ckm_mod
 from repro.core import fleet as fleet_mod
 from repro.core import ingest as ingest_mod
+from repro.obs import runtime as obs_rt
 
 __all__ = ["DecodeResult", "FleetServiceStats", "FleetService"]
 
@@ -60,6 +62,7 @@ class FleetServiceStats:
     decodes: int = 0  # decode calls answered
     decode_hits: int = 0  # served from the LRU
     decode_misses: int = 0  # freshly decoded
+    decode_cache_evictions: int = 0  # LRU entries dropped at capacity
     evictions: int = 0
     restores: int = 0
 
@@ -147,6 +150,7 @@ class FleetService:
         pending, self._pending = self._pending, []
         if not pending:
             return 0
+        t_flush = time.perf_counter()
         for t, _ in pending:
             if t in self._evicted:
                 self.restore(t)
@@ -176,15 +180,31 @@ class FleetService:
             group_ids.clear()
             group_batches.clear()
 
-        for t, b in stream:
-            if group_batches and b.shape != group_batches[0].shape:
-                dispatch()  # ragged boundary: keep arrival order intact
-            group_ids.append(t)
-            group_batches.append(b)
-            self.stats.requests += 1
-            self.stats.points += int(b.shape[0])
-        dispatch()
+        from repro.obs import trace as obs_trace
+
+        with obs_trace.span(
+            "fleet.flush", requests=len(pending), async_ingest=async_ingest
+        ):
+            for t, b in stream:
+                if group_batches and b.shape != group_batches[0].shape:
+                    dispatch()  # ragged boundary: keep arrival order intact
+                group_ids.append(t)
+                group_batches.append(b)
+                self.stats.requests += 1
+                self.stats.points += int(b.shape[0])
+            dispatch()
+            if obs_rt.ENABLED:
+                # Sync so the flush span/histogram measure the fold, not its
+                # async dispatch; the untelemetered path keeps dispatching.
+                jax.block_until_ready(self.state)
         self._touch(t for t, _ in pending)
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.histogram("fleet.flush.seconds").observe(
+                time.perf_counter() - t_flush
+            )
+            obs_metrics.counter("fleet.flush.requests").inc(len(pending))
         return len(pending)
 
     def ingest(self, tenant_ids, batches, *, async_ingest: bool = False) -> int:
@@ -215,27 +235,74 @@ class FleetService:
         if use_cache and key in self._cache:
             self._cache.move_to_end(key)
             self.stats.decode_hits += 1
+            if obs_rt.ENABLED:
+                from repro.obs import metrics as obs_metrics
+
+                obs_metrics.counter("fleet.decode.hits").inc()
             return self._cache[key]._replace(cached=True)
         self.stats.decode_misses += 1
-        z, lo, hi = self.engine.finalize_tenant(self.state, t)
-        cents, alphas, cost = ckm_mod.decode_sketch(
-            jax.random.fold_in(self.decode_key, t),
-            z,
-            self.engine.operator(t),
-            lo,
-            hi,
-            self.decode_config,
-        )
+        from repro.obs import trace as obs_trace
+
+        with obs_trace.span("fleet.decode", tenant=t, version=key[1]):
+            z, lo, hi = self.engine.finalize_tenant(self.state, t)
+            cents, alphas, cost = ckm_mod.decode_sketch(
+                jax.random.fold_in(self.decode_key, t),
+                z,
+                self.engine.operator(t),
+                lo,
+                hi,
+                self.decode_config,
+            )
         result = DecodeResult(cents, alphas, cost, key[1], cached=False)
         if use_cache and self.decode_cache_entries > 0:
             self._cache[key] = result
             self._cache.move_to_end(key)
             while len(self._cache) > self.decode_cache_entries:
                 self._cache.popitem(last=False)
+                self.stats.decode_cache_evictions += 1
+                if obs_rt.ENABLED:
+                    from repro.obs import metrics as obs_metrics
+
+                    obs_metrics.counter("fleet.decode.cache_evictions").inc()
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.counter("fleet.decode.misses").inc()
         return result
 
     def cache_len(self) -> int:
         return len(self._cache)
+
+    def drift(self, tenant: int) -> float:
+        """O(m) sketch-space drift of one tenant: how far the live sketch has
+        moved from the decoded model currently being served.
+
+        The served model is the tenant's most recently used cache entry
+        (whatever version it was decoded at); with no cached decode, a fresh
+        decode is taken — drift then just reports that decode's residual.
+        Emits the ``fleet.drift{tenant=...}`` gauge when telemetry is on.
+        """
+        from repro.obs.diagnose import sketch_drift
+
+        t = int(tenant)
+        if t in self._evicted:
+            self.restore(t)
+        served = None
+        for ct, cv in reversed(self._cache):
+            if ct == t:
+                served = self._cache[(ct, cv)]
+                break
+        if served is None:
+            served = self.decode(t)
+        z_live, _, _ = self.engine.finalize_tenant(self.state, t)
+        score = sketch_drift(
+            z_live, served.centroids, served.weights, self.engine.operator(t)
+        )
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.gauge("fleet.drift", tenant=t).set(score)
+        return score
 
     # -- evict / restore ----------------------------------------------------
 
@@ -274,6 +341,10 @@ class FleetService:
         self.state = self.engine.reset_tenant(self.state, t)
         self._evicted.add(t)
         self.stats.evictions += 1
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.counter("fleet.tenant.evictions").inc()
 
     def restore(self, tenant: int) -> None:
         """Load the latest eviction checkpoint back into the tenant's row.
@@ -311,6 +382,10 @@ class FleetService:
         self._versions[t] = int(meta.get("version", self.version(t)))
         self._evicted.discard(t)
         self.stats.restores += 1
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.counter("fleet.tenant.restores").inc()
 
     @property
     def evicted(self) -> frozenset[int]:

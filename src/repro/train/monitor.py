@@ -31,12 +31,20 @@ class ActivationMonitor:
     m: int | None = None
     sigma2: float = 1.0
     seed: int = 17
+    # Frequency-operator family (core.freq_ops registry).  None resolves by
+    # d_model: "structured" at dim >= 512 — monitoring a 4k-dim residual
+    # stream must not materialize the (dim, m) dense matrix (O(m) signs +
+    # radii instead, O(m·sqrt(dim)) projections) — and the paper's "dense"
+    # below that, where the matrix is small and fastest.
+    freq_op: str | None = None
 
     def __post_init__(self):
         self.m_ = self.m or 4 * self.k * self.dim
+        if self.freq_op is None:
+            self.freq_op = "structured" if self.dim >= 512 else "dense"
         # Spec-carrying operator: checkpoints/peers need only op.spec().
         self.freqs = fo.make_operator(
-            "dense", jax.random.PRNGKey(self.seed), self.m_, self.dim,
+            self.freq_op, jax.random.PRNGKey(self.seed), self.m_, self.dim,
             self.sigma2,
         )
 
@@ -57,6 +65,27 @@ class ActivationMonitor:
         return ckm_mod.CKMResult(
             cents, alphas, cost, jnp.asarray(self.sigma2), self.freqs, z, (lo, hi)
         )
+
+    def sketch_drift(self, state: ds.SketchState, result: ckm_mod.CKMResult) -> float:
+        """O(m) drift of the *live* window against a decoded snapshot: CF
+        distance between the current state's sketch and ``result``'s
+        re-sketched centroids (``repro.obs.diagnose.sketch_drift``) — no
+        decode needed, so it can run every window where :meth:`decode` +
+        :meth:`drift` only run at checkpoint boundaries.  Emits the
+        ``monitor.sketch_drift`` gauge when telemetry is enabled.
+        """
+        from repro.obs import runtime as obs_rt
+        from repro.obs.diagnose import sketch_drift
+
+        z_live, _, _ = ds.finalize(state)
+        score = sketch_drift(
+            z_live, result.centroids, result.weights, self.freqs
+        )
+        if obs_rt.ENABLED:
+            from repro.obs import metrics as obs_metrics
+
+            obs_metrics.gauge("monitor.sketch_drift").set(score)
+        return score
 
     @staticmethod
     def drift(prev: ckm_mod.CKMResult, cur: ckm_mod.CKMResult) -> float:

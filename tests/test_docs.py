@@ -18,6 +18,7 @@ ROOT = Path(__file__).resolve().parents[1]
 DOC_FILES = [
     ROOT / "docs" / "api.md",
     ROOT / "docs" / "scaling.md",
+    ROOT / "docs" / "observability.md",
     ROOT / "README.md",
 ]
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)

@@ -119,3 +119,20 @@ def test_named_public_symbols_exist(path):
 
 def test_docs_corpus_nonempty():
     assert len(DOC_FILES) >= 4  # architecture, api, scaling, README
+
+
+@pytest.mark.docs
+def test_obs_public_api_resolves_and_is_documented():
+    """Every ``repro.obs.__all__`` symbol exists on the package AND appears
+    in ``docs/observability.md`` — the metrics/tracing/diagnostics API
+    cannot grow an undocumented (or documented-but-renamed) surface."""
+    import repro.obs as obs
+
+    doc = (ROOT / "docs" / "observability.md").read_text()
+    problems = []
+    for name in obs.__all__:
+        if not hasattr(obs, name):
+            problems.append(f"repro.obs.__all__ names missing attr {name!r}")
+        if name not in doc:
+            problems.append(f"repro.obs.{name} not mentioned in observability.md")
+    assert not problems, "\n".join(problems)
