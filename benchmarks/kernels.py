@@ -512,6 +512,76 @@ def run_fleet(results: dict, n_tenants=1024, batch=32, feat=8, m=64):
     return results
 
 
+def run_window(results: dict, n_tenants=256, batch=32, feat=8, m=64,
+               buckets=8, steps=16, gamma=0.9):
+    """Temporal-window row (ISSUE 9): windowed-vs-lifetime fleet update cost.
+
+    The same aligned traffic — ``steps`` update blocks of one ``(batch, n)``
+    batch per tenant — folds into a plain lifetime ``FleetEngine`` and into a
+    ``SketchWindow`` ring (W buckets, advancing one tick per block) over a
+    decayed fleet.  The windowed path pays the decayed fold (stamp/gamma
+    bookkeeping + the fold-time ``gamma**dt`` scale) and the ring's O(1)
+    host-side slot claim per update, but touches exactly ONE bucket — the
+    other W-1 are merged on *read*, never copied on write.  Acceptance: the
+    per-update wall clock stays <= 1.3x the lifetime fleet update.
+    """
+    from repro.core import fleet as fl
+    from repro.core.window import SketchWindow
+
+    specs = fl.fleet_specs(
+        jax.random.PRNGKey(23), n_tenants, "dense", m, feat, 1.0
+    )
+    lifetime = fl.FleetEngine(specs, chunk=batch)
+    windowed = SketchWindow(
+        fl.FleetEngine(specs, chunk=batch, decay=gamma), buckets=buckets
+    )
+    xs = jax.random.normal(jax.random.PRNGKey(24), (n_tenants, batch, feat))
+
+    def run_lifetime():
+        s = lifetime.init_state()
+        for _ in range(steps):
+            s = lifetime.update(s, xs)
+        return s
+
+    def run_windowed():
+        ws = windowed.init_state()
+        for k in range(steps):
+            ws = windowed.update(ws, xs, t=float(k))
+        return ws.buckets  # the pytree timed() can block on
+
+    _, t_life = timed(run_lifetime)  # first call pays compilation
+    _, t_life = timed(run_lifetime)
+    _, t_win = timed(run_windowed)
+    ring, t_win = timed(run_windowed)
+
+    ratio = t_win / t_life
+    results["window_update"] = {
+        "n_tenants": n_tenants,
+        "batch": batch,
+        "n": feat,
+        "m": m,
+        "window_buckets": buckets,
+        "decay": gamma,
+        "steps": steps,
+        "lifetime_seconds_per_update": t_life / steps,
+        "windowed_seconds_per_update": t_win / steps,
+        "overhead_ratio": ratio,
+        "ring_state_bytes": int(
+            sum(
+                leaf.size * leaf.dtype.itemsize
+                for b in ring
+                for leaf in jax.tree_util.tree_leaves(b)
+            )
+        ),
+        "meets_1p3x_acceptance": bool(ratio <= 1.3),
+    }
+    csv_line(
+        f"window_update_T{n_tenants}_W{buckets}_m{m}", t_win / steps,
+        f"lifetime={t_life/steps*1e6:.1f}us;ratio=x{ratio:.2f}",
+    )
+    return results
+
+
 def run_obs_overhead(
     results: dict, n_pts=4096, feat=16, m=1024, inner=40, trials=7
 ):
@@ -696,6 +766,7 @@ def run(full: bool = False):
     run_ingest(results)
     run_topologies(results)
     run_fleet(results)
+    run_window(results)
     run_obs_overhead(results)
     save("kernels", results)
     # Acceptance checked AFTER save so a perf flake on a loaded machine
@@ -711,6 +782,13 @@ def run(full: bool = False):
         f"fleet stacked update speedup {fu['speedup']:.1f}x < 5x acceptance "
         f"(stacked {fu['stacked_seconds']:.3f}s, "
         f"looped {fu['looped_seconds']:.3f}s)"
+    )
+    wu = results["window_update"]
+    assert wu["meets_1p3x_acceptance"], (
+        f"windowed fleet update overhead {wu['overhead_ratio']:.2f}x > 1.3x "
+        f"acceptance (lifetime "
+        f"{wu['lifetime_seconds_per_update']*1e6:.1f}us/update, windowed "
+        f"{wu['windowed_seconds_per_update']*1e6:.1f}us/update)"
     )
     oo = results["obs_overhead"]
     assert oo["meets_2pct_acceptance"], (

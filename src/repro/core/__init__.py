@@ -33,7 +33,12 @@ from repro.core.decoders import (
     get_decoder,
     register_decoder,
 )
-from repro.core.engine import BACKENDS, SketchEngine
+from repro.core.engine import (
+    BACKENDS,
+    DecayedQuantizedSketchEngineState,
+    DecayedSketchEngineState,
+    SketchEngine,
+)
 from repro.core.fleet import (
     FLEET_BACKENDS,
     FleetEngine,
@@ -50,6 +55,7 @@ from repro.core.freq_ops import (
     register_freq_op,
 )
 from repro.core.ingest import BatchSource, IngestStats, ingest_stream, prefetched
+from repro.core.window import SketchWindow, WindowState
 from repro.core.topology import (
     TOPOLOGIES,
     StragglerMerger,
@@ -78,7 +84,11 @@ __all__ = [
     "get_decoder",
     "register_decoder",
     "BACKENDS",
+    "DecayedQuantizedSketchEngineState",
+    "DecayedSketchEngineState",
     "SketchEngine",
+    "SketchWindow",
+    "WindowState",
     "FLEET_BACKENDS",
     "FleetEngine",
     "fleet_quantizers",

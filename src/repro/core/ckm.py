@@ -100,6 +100,13 @@ class CKMConfig:
     # correction before decoding (see core.quantize).  Works on every
     # backend; on "sharded" the cross-device merge psums integer accumulators.
     sketch_quantization: str = "none"
+    # Exponential time decay of the sketch state (None = lifetime average).
+    # A gamma in (0, 1] switches the engine to the timestamped state
+    # transform: update/merge scale older accumulator content by gamma**dt,
+    # so the sketch tracks non-stationary streams ("cluster recent traffic").
+    # Composes with every backend and with sketch_quantization; see
+    # core.engine ("State transforms") and core.window for bucketed windows.
+    decay: float | None = None
     # Sketch decoder: any name in the registry (core.decoders) — "clompr"
     # (paper Algorithm 1), "sketch_shift" (mean-shift on the sketched
     # characteristic function) or "amp" (CL-AMP joint message passing,
@@ -234,6 +241,7 @@ def make_engine(
     return SketchEngine(
         w, cfg.sketch_backend, chunk=cfg.sketch_chunk, mesh=mesh,
         quantizer=quantizer, reduce_topology=cfg.reduce_topology,
+        decay=cfg.decay,
     )
 
 

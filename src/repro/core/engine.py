@@ -57,6 +57,27 @@ integer accumulators; the 32x factor applies to the raw per-sample codes).
 See ``docs/architecture.md`` for the full contract and ``core.quantize`` for
 the encoding/decoding math.
 
+Passing ``decay=gamma`` (0 < gamma <= 1) switches the state to its
+**time-decayed** twin: every accumulator entry carries the timestamp of the
+newest contribution folded in, and merging two states first scales the older
+operand's trig/weight sums by ``gamma**dt`` (dt = stamp difference) before the
+elementwise combine.  The decayed merge is still commutative with the same
+identity (``stamp=-inf``); associativity holds exactly in the algebra (each
+batch contribution ends scaled by ``gamma**(t_newest - t_batch)`` under any
+association) and bitwise whenever the operands share a stamp — cross-stamp
+regroupings agree to float rounding, like any float re-association.  The
+finalized sketch becomes the exponentially-reweighted average
+``z = sum_i gamma**(T - t_i) part_i / sum_i gamma**(T - t_i) w_i`` — a live
+estimate of the *recent* distribution on non-stationary streams.  On the
+quantized transform the int32 code accumulators are never scaled (a decayed
+integer is not an integer): the newest-stamp segment stays an exact int32
+sum, and decay moves older segments into a float32 side-channel
+(``dcos_acc``/``dsin_acc``) carrying the accumulated ``gamma`` powers, so
+same-stamp merges remain bitwise split-invariant.  Bounds ``lower/upper`` and
+``count`` are lifetime (min/max and counts cannot be decayed).  Composes with
+every backend and with ``quantizer=``; see ``core.window`` for the bucketed
+ring window built on top.
+
 Scaling hooks
 -------------
 Batch *production* and cross-device *merging* are pluggable too.
@@ -91,6 +112,8 @@ from repro.utils import compat
 __all__ = [
     "SketchEngineState",
     "QuantizedSketchEngineState",
+    "DecayedSketchEngineState",
+    "DecayedQuantizedSketchEngineState",
     "SketchEngine",
     "BACKENDS",
 ]
@@ -129,6 +152,58 @@ class QuantizedSketchEngineState(NamedTuple):
     count: jax.Array  # () f32 — number of points folded in
 
 
+class DecayedSketchEngineState(NamedTuple):
+    """Time-decayed twin of :class:`SketchEngineState`.
+
+    ``cos_acc/sin_acc/weight_sum`` are held *in the units of* ``stamp`` (the
+    tick of the newest contribution): merging decays the older operand by
+    ``gamma**dt`` first, so at any moment the sums equal
+    ``sum_i gamma**(stamp - t_i) * contribution_i``.  ``lower/upper`` stay
+    the lifetime envelope and ``count`` the raw folded-point total (bounds
+    and counts have no meaningful decay).  ``gamma`` rides the state so the
+    merge is self-describing (checkpoints, stacked fleets, vmap).
+    """
+
+    cos_acc: jax.Array  # (m,) f32 — decayed sum of beta_l cos(w^T y_l)
+    sin_acc: jax.Array  # (m,) f32 — decayed sum of beta_l sin(w^T y_l)
+    weight_sum: jax.Array  # () f32 — decayed mass sum_i gamma^dt_i * w_i
+    lower: jax.Array  # (n,) f32 — lifetime per-coordinate min
+    upper: jax.Array  # (n,) f32 — lifetime per-coordinate max
+    count: jax.Array  # () f32 — raw number of points folded (undecayed)
+    stamp: jax.Array  # () f32 — tick of the newest fold; -inf = identity
+    gamma: jax.Array  # () f32 — decay base per tick (static per engine)
+
+
+class DecayedQuantizedSketchEngineState(NamedTuple):
+    """Decay + quantization: exact int32 codes, decay in a float side-scale.
+
+    An int32 code sum cannot be scaled by ``gamma**dt`` and stay an integer,
+    so the decayed quantized state is segmented by stamp: ``qcos/qsin_acc``
+    hold the **exact int32 code sums of the newest-stamp segment** (same-tick
+    merges add integers — bitwise split-invariant, exactly as the lifetime
+    quantized state), while ``dcos/dsin_acc`` carry every older segment as
+    float32 code mass with its accumulated decay factors applied.  When a
+    merge advances the stamp, the older operand's whole content (ints +
+    side-channel) folds into the side-channel through one ``gamma**dt``
+    multiply; ``finalize`` dequantizes the sum of both segments (the E[sign]
+    correction is linear, so it applies to the combined code mass).
+    """
+
+    qcos_acc: jax.Array  # (m,) i32 — exact code sums of the newest segment
+    qsin_acc: jax.Array  # (m,) i32
+    dcos_acc: jax.Array  # (m,) f32 — decayed older code mass (side-scale)
+    dsin_acc: jax.Array  # (m,) f32
+    weight_sum: jax.Array  # () f32 — decayed effective count
+    lower: jax.Array  # (n,) f32 — lifetime per-coordinate min
+    upper: jax.Array  # (n,) f32 — lifetime per-coordinate max
+    count: jax.Array  # () f32 — raw number of points folded (undecayed)
+    stamp: jax.Array  # () f32 — tick of the newest fold; -inf = identity
+    gamma: jax.Array  # () f32 — decay base per tick
+
+
+DECAYED_STATE_TYPES = (DecayedSketchEngineState, DecayedQuantizedSketchEngineState)
+
+
 class _EngineInstruments(NamedTuple):
     """Per-engine cached metric handles (resolved once per registry
     generation, so the enabled steady state is plain ``float +=``)."""
@@ -151,9 +226,74 @@ def _state_nbytes(state) -> int:
     )
 
 
+def _decay_factor(gamma, dt):
+    """``gamma**dt`` with the identity edge cases pinned.
+
+    ``dt`` can be ``nan`` (both operands are the ``stamp=-inf`` identity:
+    ``(-inf) - (-inf)``) or ``inf`` (identity folding into a stamped state);
+    both must behave as "no decay of nothing".  The double ``where`` keeps
+    ``nan`` out of the power's gradient-free forward value and pins
+    ``dt <= 0`` (the newest operand, or identity-identity) to exactly 1.0 so
+    same-stamp merges stay bitwise equal to the undecayed merge.
+    """
+    safe = jnp.where(dt > 0, dt, 0.0)
+    return jnp.where(dt > 0, gamma**safe, 1.0)
+
+
 @jax.jit
 def _merge_states(a, b):
     """Merge for either state flavour (dispatch happens at trace time)."""
+    if type(a) is not type(b):
+        raise TypeError(
+            f"cannot merge mismatched state flavours: "
+            f"{type(a).__name__} vs {type(b).__name__}"
+        )
+    if isinstance(a, DecayedSketchEngineState):
+        t = jnp.maximum(a.stamp, b.stamp)
+        fa = _decay_factor(a.gamma, t - a.stamp)
+        fb = _decay_factor(b.gamma, t - b.stamp)
+        return DecayedSketchEngineState(
+            cos_acc=fa[..., None] * a.cos_acc + fb[..., None] * b.cos_acc,
+            sin_acc=fa[..., None] * a.sin_acc + fb[..., None] * b.sin_acc,
+            weight_sum=fa * a.weight_sum + fb * b.weight_sum,
+            lower=jnp.minimum(a.lower, b.lower),
+            upper=jnp.maximum(a.upper, b.upper),
+            count=a.count + b.count,
+            stamp=t,
+            gamma=jnp.maximum(a.gamma, b.gamma),
+        )
+    if isinstance(a, DecayedQuantizedSketchEngineState):
+        t = jnp.maximum(a.stamp, b.stamp)
+        fa = _decay_factor(a.gamma, t - a.stamp)
+        fb = _decay_factor(b.gamma, t - b.stamp)
+        # Segment by stamp: the operand(s) at the new stamp keep their int32
+        # codes exact (same-tick merge = integer add, bitwise); an older
+        # operand folds *entirely* (ints + side-channel) into the float
+        # side-channel through one gamma**dt multiply.
+        a_new = a.stamp >= t
+        b_new = b.stamp >= t
+
+        def _i(new, q):
+            return jnp.where(new[..., None], q, 0)
+
+        def _d(new, f, q, d):
+            qf = q.astype(jnp.float32)
+            return jnp.where(new[..., None], d, f[..., None] * (d + qf))
+
+        return DecayedQuantizedSketchEngineState(
+            qcos_acc=_i(a_new, a.qcos_acc) + _i(b_new, b.qcos_acc),
+            qsin_acc=_i(a_new, a.qsin_acc) + _i(b_new, b.qsin_acc),
+            dcos_acc=_d(a_new, fa, a.qcos_acc, a.dcos_acc)
+            + _d(b_new, fb, b.qcos_acc, b.dcos_acc),
+            dsin_acc=_d(a_new, fa, a.qsin_acc, a.dsin_acc)
+            + _d(b_new, fb, b.qsin_acc, b.dsin_acc),
+            weight_sum=fa * a.weight_sum + fb * b.weight_sum,
+            lower=jnp.minimum(a.lower, b.lower),
+            upper=jnp.maximum(a.upper, b.upper),
+            count=a.count + b.count,
+            stamp=t,
+            gamma=jnp.maximum(a.gamma, b.gamma),
+        )
     if isinstance(a, QuantizedSketchEngineState):
         return QuantizedSketchEngineState(
             qcos_acc=a.qcos_acc + b.qcos_acc,
@@ -198,6 +338,27 @@ def _finalize_quantized(state: QuantizedSketchEngineState, dither, bits: int):
     return z, state.lower, state.upper
 
 
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _finalize_decayed_quantized(
+    state: DecayedQuantizedSketchEngineState, dither, bits: int
+):
+    # The dequantization correction is linear in the code sums, so it applies
+    # to the combined (exact int newest segment + decayed float older mass)
+    # code total directly.  With an empty side-channel this is bitwise equal
+    # to ``_finalize_quantized``: ``q.astype(f32) + 0.0`` and the int path's
+    # internal ``astype(f32)`` produce the same float.
+    cos_acc, sin_acc = qz.dequantize_sums(
+        state.qcos_acc.astype(jnp.float32) + state.dcos_acc,
+        state.qsin_acc.astype(jnp.float32) + state.dsin_acc,
+        dither,
+        bits,
+    )
+    denom = jnp.maximum(state.weight_sum, 1e-30)
+    z = jnp.concatenate([cos_acc, -sin_acc]) / denom
+    z = jnp.where(state.weight_sum > 0, z, jnp.zeros_like(z))
+    return z, state.lower, state.upper
+
+
 class SketchEngine:
     """Streaming/mergeable sketch computation over pluggable backends.
 
@@ -225,6 +386,14 @@ class SketchEngine:
         monoid laws make every schedule produce the same sketch (bitwise on
         the quantized path); the choice trades wire bytes against hop count
         (``core.topology.wire_cost_model``, ``docs/scaling.md``).
+    decay : optional per-tick exponential decay base ``gamma`` in (0, 1].
+        Switches the engine to the time-decayed state transform: states gain
+        a ``stamp`` (tick of the newest contribution), ``update`` accepts a
+        keyword ``t``, and merging scales the older operand's
+        ``cos_acc/sin_acc/weight_sum`` by ``gamma**dt`` first, so the sketch
+        is always an exponentially weighted average favouring recent data.
+        ``decay=1.0`` keeps timestamps but decays nothing.  Composes with
+        every backend and with ``quantizer`` (see "State transforms").
     """
 
     def __init__(
@@ -240,11 +409,14 @@ class SketchEngine:
         data_axes: Sequence[str] = ("data",),
         quantizer: qz.SketchQuantizer | None = None,
         reduce_topology: str = "allreduce",
+        decay: float | None = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         if backend == "sharded" and mesh is None:
             raise ValueError("backend='sharded' requires a mesh")
+        if decay is not None and not 0.0 < float(decay) <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay!r}")
         topo.get_topology(reduce_topology)  # fail fast on unknown names
         self.freq_op = fo.as_operator(w)
         self.n, self.m = self.freq_op.n, self.freq_op.m
@@ -262,6 +434,7 @@ class SketchEngine:
                 f"{(self.m,)}"
             )
         self.quantizer = quantizer
+        self.decay = None if decay is None else float(decay)
         self._obs_h: _EngineInstruments | None = None
 
     def _obs(self) -> _EngineInstruments:
@@ -304,6 +477,32 @@ class SketchEngine:
 
     def init_state(self) -> SketchEngineState | QuantizedSketchEngineState:
         """The monoid identity: merge(init_state(), s) == s for any s."""
+        if self.decay is not None:
+            stamp = jnp.full((), -jnp.inf, jnp.float32)
+            gamma = jnp.full((), self.decay, jnp.float32)
+            if self.quantizer is not None:
+                return DecayedQuantizedSketchEngineState(
+                    qcos_acc=jnp.zeros((self.m,), jnp.int32),
+                    qsin_acc=jnp.zeros((self.m,), jnp.int32),
+                    dcos_acc=jnp.zeros((self.m,), jnp.float32),
+                    dsin_acc=jnp.zeros((self.m,), jnp.float32),
+                    weight_sum=jnp.zeros((), jnp.float32),
+                    lower=jnp.full((self.n,), jnp.inf, jnp.float32),
+                    upper=jnp.full((self.n,), -jnp.inf, jnp.float32),
+                    count=jnp.zeros((), jnp.float32),
+                    stamp=stamp,
+                    gamma=gamma,
+                )
+            return DecayedSketchEngineState(
+                cos_acc=jnp.zeros((self.m,), jnp.float32),
+                sin_acc=jnp.zeros((self.m,), jnp.float32),
+                weight_sum=jnp.zeros((), jnp.float32),
+                lower=jnp.full((self.n,), jnp.inf, jnp.float32),
+                upper=jnp.full((self.n,), -jnp.inf, jnp.float32),
+                count=jnp.zeros((), jnp.float32),
+                stamp=stamp,
+                gamma=gamma,
+            )
         if self.quantizer is not None:
             return QuantizedSketchEngineState(
                 qcos_acc=jnp.zeros((self.m,), jnp.int32),
@@ -320,6 +519,36 @@ class SketchEngine:
             lower=jnp.full((self.n,), jnp.inf, jnp.float32),
             upper=jnp.full((self.n,), -jnp.inf, jnp.float32),
             count=jnp.zeros((), jnp.float32),
+        )
+
+    def _lift_partial(self, part, t):
+        """Wrap a base (undecayed) batch partial as a decayed state at tick
+        ``t`` — the bridge between the backend batch kernels (which know
+        nothing about time) and the timestamped merge."""
+        stamp = jnp.asarray(t, jnp.float32)
+        gamma = jnp.full(jnp.shape(stamp), self.decay, jnp.float32)
+        if isinstance(part, QuantizedSketchEngineState):
+            return DecayedQuantizedSketchEngineState(
+                qcos_acc=part.qcos_acc,
+                qsin_acc=part.qsin_acc,
+                dcos_acc=jnp.zeros_like(part.qcos_acc, jnp.float32),
+                dsin_acc=jnp.zeros_like(part.qsin_acc, jnp.float32),
+                weight_sum=part.weight_sum,
+                lower=part.lower,
+                upper=part.upper,
+                count=part.count,
+                stamp=stamp,
+                gamma=gamma,
+            )
+        return DecayedSketchEngineState(
+            cos_acc=part.cos_acc,
+            sin_acc=part.sin_acc,
+            weight_sum=part.weight_sum,
+            lower=part.lower,
+            upper=part.upper,
+            count=part.count,
+            stamp=stamp,
+            gamma=gamma,
         )
 
     def _partial_state(self, batch: jax.Array, weights: jax.Array | None):
@@ -339,18 +568,42 @@ class SketchEngine:
             weights = jnp.asarray(weights, jnp.float32)
         return self._batch_state(x, weights)
 
-    def update(self, state, batch: jax.Array, weights: jax.Array | None = None):
+    def update(
+        self,
+        state,
+        batch: jax.Array,
+        weights: jax.Array | None = None,
+        *,
+        t: float | jax.Array | None = None,
+    ):
         """Fold ``batch: (B, n)`` into ``state``.  ``weights`` default to 1
         per point, so streaming batches of any size weight points equally.
         The quantized state transform only represents unit weights (integer
-        code counts) and rejects explicit ``weights``."""
+        code counts) and rejects explicit ``weights``.
+
+        Under ``decay``, ``t`` is the batch's tick: older state content is
+        scaled by ``gamma**(t - state.stamp)`` as it merges.  ``t=None``
+        reuses the state's current stamp (fold with no time advance — the
+        empty state resolves to tick 0).  Passing ``t`` without ``decay``
+        is an error.
+        """
+        if t is not None and self.decay is None:
+            raise ValueError(
+                "update(t=...) requires a decay-enabled engine "
+                "(SketchEngine(decay=gamma))"
+            )
         if not obs_rt.ENABLED:
-            return _merge_states(state, self._partial_state(batch, weights))
+            part = self._partial_state(batch, weights)
+            if self.decay is not None:
+                part = self._lift_partial(part, self._resolve_t(state, t))
+            return _merge_states(state, part)
         from repro.obs import trace as obs_trace
 
         h = self._obs()
         with obs_trace.span("engine.update", backend=self.backend):
             part = self._partial_state(batch, weights)
+            if self.decay is not None:
+                part = self._lift_partial(part, self._resolve_t(state, t))
             with obs_trace.span("engine.merge", backend=self.backend):
                 out = _merge_states(state, part)
         h.update_calls.inc()
@@ -358,6 +611,36 @@ class SketchEngine:
         h.merge_calls.inc()
         h.state_bytes.set(_state_nbytes(out))
         return out
+
+    @staticmethod
+    def _resolve_t(state, t):
+        """``t=None`` -> the state's own stamp (no time advance), with the
+        identity's ``-inf`` stamp resolving to tick 0.  A partial must never
+        carry ``-inf`` itself: a non-empty contribution stamped -inf would be
+        decayed to nothing by any later merge."""
+        if t is not None:
+            return t
+        return jnp.where(jnp.isfinite(state.stamp), state.stamp, 0.0)
+
+    def decay_to(self, state, t: float | jax.Array):
+        """Advance a decayed state's clock to tick ``t`` without folding data:
+        ``cos_acc/sin_acc/weight_sum`` scale by ``gamma**(t - stamp)``.
+
+        Expressed inside the merge algebra — merging with an empty state
+        stamped ``t`` — so it commutes with every other monoid op.  A ``t``
+        at or before the current stamp is a bitwise no-op (states never move
+        backwards in time).
+        """
+        if self.decay is None:
+            raise ValueError(
+                "decay_to requires a decay-enabled engine "
+                "(SketchEngine(decay=gamma))"
+            )
+        empty = self.init_state()
+        stamp = jnp.broadcast_to(
+            jnp.asarray(t, jnp.float32), jnp.shape(empty.stamp)
+        )
+        return _merge_states(state, empty._replace(stamp=stamp))
 
     def merge(self, a, b):
         """Associative + commutative combine of two partial states."""
@@ -416,9 +699,15 @@ class SketchEngine:
                     f"int32 capacity of {cap} points "
                     "(core.quantize.accumulator_capacity)"
                 )
+            if isinstance(state, DecayedQuantizedSketchEngineState):
+                return _finalize_decayed_quantized(
+                    state, self.quantizer.dither, self.quantizer.bits
+                )
             return _finalize_quantized(
                 state, self.quantizer.dither, self.quantizer.bits
             )
+        # ``_finalize_state`` duck-types over the float flavours — the decayed
+        # state has the same accumulator fields (jit retraces per pytree).
         return _finalize_state(state)
 
     # -- conveniences -------------------------------------------------------

@@ -50,7 +50,12 @@ from repro.core import engine as eng_mod
 from repro.core import freq_ops as fo
 from repro.core import quantize as qz
 from repro.core import sketch as sk
-from repro.core.engine import QuantizedSketchEngineState, SketchEngineState
+from repro.core.engine import (
+    DecayedQuantizedSketchEngineState,
+    DecayedSketchEngineState,
+    QuantizedSketchEngineState,
+    SketchEngineState,
+)
 
 __all__ = [
     "FLEET_BACKENDS",
@@ -146,6 +151,12 @@ class FleetEngine:
         each, shared bit width) — switches the stacked state to the int32
         :class:`~repro.core.engine.QuantizedSketchEngineState` twin.
     chunk, block_n, block_m, interpret : forwarded to the per-tenant trace.
+    decay : optional per-tick exponential decay base gamma in (0, 1], shared
+        by every tenant — switches the stacked state to the timestamped
+        decayed twin (stamps ``(T,)``), exactly as
+        ``SketchEngine(decay=...)`` does per tenant.  ``update``/``ingest``
+        then accept a keyword ``t`` and :meth:`decay_to` advances the whole
+        fleet's clock in one dispatch.
     """
 
     def __init__(
@@ -158,12 +169,15 @@ class FleetEngine:
         block_n: int = 1024,
         block_m: int = 512,
         interpret: bool | None = None,
+        decay: float | None = None,
     ):
         if backend not in FLEET_BACKENDS:
             raise ValueError(
                 f"fleet backend must be one of {FLEET_BACKENDS}, got "
                 f"{backend!r}"
             )
+        if decay is not None and not 0.0 < float(decay) <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay!r}")
         if not operators:
             raise ValueError("a fleet needs at least one tenant operator")
         ops = [
@@ -177,6 +191,7 @@ class FleetEngine:
         self.block_n = block_n
         self.block_m = block_m
         self.interpret = interpret
+        self.decay = None if decay is None else float(decay)
         self.specs: tuple[fo.FreqOpSpec | None, ...] = tuple(
             self._try_spec(op) for op in ops
         )
@@ -238,6 +253,7 @@ class FleetEngine:
             block_m=self.block_m,
             interpret=self.interpret,
             quantizer=self.quantizer(tenant),
+            decay=self.decay,
         )
 
     # -- stacked monoid ops -------------------------------------------------
@@ -246,7 +262,7 @@ class FleetEngine:
         """Stacked monoid identity: every tenant row is ``init_state()``."""
         t, n, m = self.n_tenants, self.n, self.m
         if self.quantized:
-            return QuantizedSketchEngineState(
+            base = QuantizedSketchEngineState(
                 qcos_acc=jnp.zeros((t, m), jnp.int32),
                 qsin_acc=jnp.zeros((t, m), jnp.int32),
                 weight_sum=jnp.zeros((t,), jnp.float32),
@@ -254,13 +270,47 @@ class FleetEngine:
                 upper=jnp.full((t, n), -jnp.inf, jnp.float32),
                 count=jnp.zeros((t,), jnp.float32),
             )
-        return SketchEngineState(
-            cos_acc=jnp.zeros((t, m), jnp.float32),
-            sin_acc=jnp.zeros((t, m), jnp.float32),
-            weight_sum=jnp.zeros((t,), jnp.float32),
-            lower=jnp.full((t, n), jnp.inf, jnp.float32),
-            upper=jnp.full((t, n), -jnp.inf, jnp.float32),
-            count=jnp.zeros((t,), jnp.float32),
+        else:
+            base = SketchEngineState(
+                cos_acc=jnp.zeros((t, m), jnp.float32),
+                sin_acc=jnp.zeros((t, m), jnp.float32),
+                weight_sum=jnp.zeros((t,), jnp.float32),
+                lower=jnp.full((t, n), jnp.inf, jnp.float32),
+                upper=jnp.full((t, n), -jnp.inf, jnp.float32),
+                count=jnp.zeros((t,), jnp.float32),
+            )
+        if self.decay is None:
+            return base
+        return self._lift_parts(base, jnp.full((t,), -jnp.inf, jnp.float32))
+
+    def _lift_parts(self, parts, stamps):
+        """Wrap stacked base partials as decayed states stamped ``stamps``
+        (``(R,)`` — one tick per row), mirroring
+        ``SketchEngine._lift_partial``."""
+        stamps = jnp.asarray(stamps, jnp.float32)
+        gamma = jnp.full(jnp.shape(stamps), self.decay, jnp.float32)
+        if isinstance(parts, QuantizedSketchEngineState):
+            return DecayedQuantizedSketchEngineState(
+                qcos_acc=parts.qcos_acc,
+                qsin_acc=parts.qsin_acc,
+                dcos_acc=jnp.zeros_like(parts.qcos_acc, jnp.float32),
+                dsin_acc=jnp.zeros_like(parts.qsin_acc, jnp.float32),
+                weight_sum=parts.weight_sum,
+                lower=parts.lower,
+                upper=parts.upper,
+                count=parts.count,
+                stamp=stamps,
+                gamma=gamma,
+            )
+        return DecayedSketchEngineState(
+            cos_acc=parts.cos_acc,
+            sin_acc=parts.sin_acc,
+            weight_sum=parts.weight_sum,
+            lower=parts.lower,
+            upper=parts.upper,
+            count=parts.count,
+            stamp=stamps,
+            gamma=gamma,
         )
 
     def _tenant_part(self, op, x, weights):
@@ -345,13 +395,31 @@ class FleetEngine:
             weights = jnp.asarray(weights, jnp.float32)
         return jax.vmap(self._tenant_part)(stacked_op, x, weights)
 
-    def update(self, state, batches, weights=None):
+    def update(self, state, batches, weights=None, *, t=None):
         """Fold one aligned block ``batches: (T, B, n)`` — one batch per
         tenant — into the stacked state in a single vmapped dispatch.
 
         Row t is bitwise what ``tenant_engine(t).update`` would produce.
+        Under ``decay``, ``t`` is the block's tick — a scalar (every tenant)
+        or ``(T,)`` (per tenant); ``t=None`` reuses each row's current stamp
+        (empty rows resolve to tick 0), matching ``SketchEngine.update``.
         """
+        if t is not None and self.decay is None:
+            raise ValueError(
+                "update(t=...) requires a decay-enabled fleet "
+                "(FleetEngine(..., decay=gamma))"
+            )
         parts = self._parts(self._stacked_op, batches, weights)
+        if self.decay is not None:
+            if t is None:
+                stamps = jnp.where(
+                    jnp.isfinite(state.stamp), state.stamp, 0.0
+                )
+            else:
+                stamps = jnp.broadcast_to(
+                    jnp.asarray(t, jnp.float32), (self.n_tenants,)
+                )
+            parts = self._lift_parts(parts, stamps)
         return eng_mod._merge_states(state, parts)
 
     def merge(self, a, b):
@@ -363,8 +431,14 @@ class FleetEngine:
         """-> ``(z (T, 2m), lower (T, n), upper (T, n))``, all tenants."""
         self._check_capacity(state)
         if self.quantized:
-            fin = functools.partial(eng_mod._finalize_quantized, bits=self.bits)
-            return jax.vmap(fin)(state, self.dither)
+            fin = (
+                eng_mod._finalize_decayed_quantized
+                if isinstance(state, DecayedQuantizedSketchEngineState)
+                else eng_mod._finalize_quantized
+            )
+            return jax.vmap(functools.partial(fin, bits=self.bits))(
+                state, self.dither
+            )
         return jax.vmap(eng_mod._finalize_state)(state)
 
     def _check_capacity(self, state):
@@ -382,7 +456,7 @@ class FleetEngine:
 
     # -- request routing: segment-scatter -----------------------------------
 
-    def ingest(self, state, tenant_ids, batches, weights=None):
+    def ingest(self, state, tenant_ids, batches, weights=None, *, t=None):
         """Fold interleaved requests ``(tenant_ids (R,), batches (R, B, n))``
         into the stacked state.
 
@@ -393,7 +467,19 @@ class FleetEngine:
         take an ordered ``lax.scan`` fold so the tenant's float partials
         combine in arrival order — the same association its isolated engine
         uses, preserving bitwise tenant isolation.
+
+        Under ``decay``, ``t`` is the requests' tick — a scalar or ``(R,)``
+        per request — and the fold ALWAYS takes the ordered scan path: the
+        decay factor each merge applies depends on the row's current stamp,
+        which a scatter-add cannot express.  ``t=None`` stamps each request
+        with its tenant row's current stamp (empty rows -> tick 0), resolved
+        per-request inside the scan.
         """
+        if t is not None and self.decay is None:
+            raise ValueError(
+                "ingest(t=...) requires a decay-enabled fleet "
+                "(FleetEngine(..., decay=gamma))"
+            )
         ids = jnp.asarray(tenant_ids, jnp.int32)
         if ids.ndim != 1 or ids.shape[0] != jnp.asarray(batches).shape[0]:
             raise ValueError(
@@ -415,6 +501,19 @@ class FleetEngine:
             )
         else:
             parts = self._parts(gathered, batches, weights)
+
+        if self.decay is not None:
+            # nan = "stamp me with my row's clock" — resolved per request in
+            # the scan fold.  (-inf cannot be the sentinel: a non-empty
+            # partial stamped -inf would decay to nothing on merge.)
+            if t is None:
+                stamps = jnp.full((ids.shape[0],), jnp.nan, jnp.float32)
+            else:
+                stamps = jnp.broadcast_to(
+                    jnp.asarray(t, jnp.float32), (ids.shape[0],)
+                )
+            parts = self._lift_parts(parts, stamps)
+            return self._scan_parts(state, ids, parts)
 
         unique = not isinstance(ids, jax.core.Tracer) and (
             len(set(int(i) for i in ids)) == ids.shape[0]
@@ -456,6 +555,13 @@ class FleetEngine:
         def fold(st, inp):
             tid, part = inp
             row = jax.tree_util.tree_map(lambda l: l[tid], st)
+            if isinstance(part, eng_mod.DECAYED_STATE_TYPES):
+                stamp = jnp.where(
+                    jnp.isnan(part.stamp),
+                    jnp.where(jnp.isfinite(row.stamp), row.stamp, 0.0),
+                    part.stamp,
+                )
+                part = part._replace(stamp=stamp)
             merged = eng_mod._merge_states(row, part)
             st = jax.tree_util.tree_map(
                 lambda l, r: l.at[tid].set(r), st, merged
@@ -464,6 +570,21 @@ class FleetEngine:
 
         state, _ = jax.lax.scan(fold, state, (ids, parts))
         return state
+
+    def decay_to(self, state, t):
+        """Advance every tenant's clock to tick ``t`` (scalar or ``(T,)``)
+        without folding data — one vmapped merge with stamped identities,
+        matching ``SketchEngine.decay_to`` row for row."""
+        if self.decay is None:
+            raise ValueError(
+                "decay_to requires a decay-enabled fleet "
+                "(FleetEngine(..., decay=gamma))"
+            )
+        empty = self.init_state()
+        stamp = jnp.broadcast_to(
+            jnp.asarray(t, jnp.float32), (self.n_tenants,)
+        )
+        return eng_mod._merge_states(state, empty._replace(stamp=stamp))
 
     # -- tenant state surgery (evict / restore build on these) --------------
 
@@ -496,9 +617,12 @@ class FleetEngine:
         row = self.tenant_state(state, tenant)
         if self.quantized:
             self._check_capacity(state)
-            return eng_mod._finalize_quantized(
-                row, self.dither[tenant], self.bits
+            fin = (
+                eng_mod._finalize_decayed_quantized
+                if isinstance(row, DecayedQuantizedSketchEngineState)
+                else eng_mod._finalize_quantized
             )
+            return fin(row, self.dither[tenant], self.bits)
         return eng_mod._finalize_state(row)
 
     def state_bytes(self) -> int:

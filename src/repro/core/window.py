@@ -1,0 +1,233 @@
+"""Bucketed ring-of-sketches windows: "cluster the last hour of events".
+
+Exponential decay (``SketchEngine(decay=...)``) down-weights the past but
+never forgets it; a **window** forgets exactly.  :class:`SketchWindow` keeps
+``W`` rotating *bucket* states — bucket ``b`` holds the sketch of everything
+that arrived in tick-interval ``[b·bucket_ticks, (b+1)·bucket_ticks)`` — and
+answers a query by merging the live buckets **on read**.  Memory is
+O(W · m) per tenant and an update touches exactly one bucket, so windowing
+costs one extra ring lookup over the lifetime engine (pinned ≤ 1.3x by
+``benchmarks/kernels.py run_window``).
+
+The ring reuses slots modulo ``W``: when a new tick claims the slot of an
+expired bucket, the stale state is reset to the monoid identity first, and
+``read`` filters slots to the exact ``(read_tick - W, read_tick]`` tick range
+— a reused slot can never leak expired data into a query
+(``tests/test_window.py`` fuzzes this).
+
+Everything here is plain monoid algebra over the wrapped engine — a
+:class:`~repro.core.engine.SketchEngine` **or** a
+:class:`~repro.core.fleet.FleetEngine` (the whole fleet windows in the same
+W-slot ring; per-slot states are the stacked ``(T, …)`` states, so one
+bucket update is still one vmapped dispatch).  Combining ``decay`` with a
+window gives exponential weighting *inside* the window and a hard cutoff at
+its edge; ``read`` then advances the merged state's clock to the query time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+__all__ = ["SketchWindow", "WindowState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowState:
+    """Ring of ``W`` bucket states plus host-side slot bookkeeping.
+
+    ``buckets`` is a tuple of W *separate* engine states (not one stacked
+    array) so an update rewrites exactly one bucket's leaves — stacking the
+    ring would make every ``.at[slot].set`` copy all W buckets.  ``slot_tick``
+    records which absolute tick each slot currently holds (-1 = identity /
+    never used); ``head`` is the newest tick ever claimed (-1 = empty).
+    Bookkeeping is host-side numpy, like ``FleetService``'s version counters.
+    """
+
+    buckets: tuple[Any, ...]
+    slot_tick: np.ndarray  # (W,) int64, -1 = empty slot
+    head: int  # newest claimed tick, -1 = empty window
+
+
+class SketchWindow:
+    """A W-bucket sliding window over any sketch engine.
+
+    Parameters
+    ----------
+    engine : the wrapped :class:`~repro.core.engine.SketchEngine` or
+        :class:`~repro.core.fleet.FleetEngine` — the window is pure monoid
+        plumbing and inherits the engine's backend/quantizer/decay transform.
+    buckets : W, the window length in buckets.  A read at tick ``c`` merges
+        buckets ``(c - W, c]`` — "the last W buckets including the current".
+    bucket_ticks : width of one bucket on the ``t`` axis (tick ``floor(t /
+        bucket_ticks)``).  With ``decay`` on the engine, ``t`` must share the
+        unit the engine's gamma is defined per.
+    """
+
+    def __init__(self, engine, buckets: int, *, bucket_ticks: float = 1.0):
+        if buckets < 1:
+            raise ValueError(f"buckets must be >= 1, got {buckets}")
+        if not bucket_ticks > 0:
+            raise ValueError(
+                f"bucket_ticks must be positive, got {bucket_ticks}"
+            )
+        self.engine = engine
+        self.buckets = int(buckets)
+        self.bucket_ticks = float(bucket_ticks)
+
+    # -- ring bookkeeping ----------------------------------------------------
+
+    def tick(self, t) -> int:
+        """Absolute bucket index of time ``t``."""
+        return int(math.floor(float(t) / self.bucket_ticks))
+
+    def init_state(self) -> WindowState:
+        """W identity buckets, nothing claimed."""
+        return WindowState(
+            buckets=tuple(
+                self.engine.init_state() for _ in range(self.buckets)
+            ),
+            slot_tick=np.full((self.buckets,), -1, np.int64),
+            head=-1,
+        )
+
+    def _claim(self, ws: WindowState, tick: int):
+        """Slot for ``tick``, resetting a stale occupant; None = too late.
+
+        Returns ``(ws, slot)``.  A tick already outside the newest possible
+        read window (``tick <= head - W``) is dropped — its slot now belongs
+        to a newer bucket and folding into it would corrupt that bucket.
+        """
+        if ws.head >= 0 and tick <= ws.head - self.buckets:
+            return ws, None
+        slot = tick % self.buckets
+        if int(ws.slot_tick[slot]) != tick:
+            # Rotate: the slot's previous occupant (an expired bucket, or
+            # nothing) is discarded and the slot restarts from identity.
+            bks = list(ws.buckets)
+            bks[slot] = self.engine.init_state()
+            st = ws.slot_tick.copy()
+            st[slot] = tick
+            ws = WindowState(
+                buckets=tuple(bks),
+                slot_tick=st,
+                head=max(ws.head, tick),
+            )
+        elif tick > ws.head:
+            ws = dataclasses.replace(ws, head=tick)
+        return ws, slot
+
+    def _fold(self, ws: WindowState, t, fold_fn):
+        """Shared claim-then-fold body of update/ingest."""
+        tick = self.tick(t)
+        ws, slot = self._claim(ws, tick)
+        if slot is None:  # older than the whole ring: drop, don't corrupt
+            return ws
+        bks = list(ws.buckets)
+        bks[slot] = fold_fn(bks[slot])
+        return dataclasses.replace(ws, buckets=tuple(bks))
+
+    # -- monoid ops ----------------------------------------------------------
+
+    def update(self, ws: WindowState, batch, weights=None, *, t):
+        """Fold ``batch`` at time ``t`` into its bucket (single engine:
+        ``batch (B, n)``; fleet engine: aligned block ``(T, B, n)``)."""
+        if self.engine.decay is not None:
+            fold = lambda b: self.engine.update(  # noqa: E731
+                b, batch, weights, t=float(t)
+            )
+        else:
+            fold = lambda b: self.engine.update(b, batch, weights)  # noqa: E731
+        return self._fold(ws, t, fold)
+
+    def ingest(self, ws: WindowState, tenant_ids, batches, weights=None, *, t):
+        """Fleet request routing at time ``t`` (see ``FleetEngine.ingest``).
+        All requests of one call share ``t`` — they land in one bucket."""
+        if self.engine.decay is not None:
+            fold = lambda b: self.engine.ingest(  # noqa: E731
+                b, tenant_ids, batches, weights, t=float(t)
+            )
+        else:
+            fold = lambda b: self.engine.ingest(  # noqa: E731
+                b, tenant_ids, batches, weights
+            )
+        return self._fold(ws, t, fold)
+
+    def read(self, ws: WindowState, t=None):
+        """Merge-on-read: the engine state of the last W buckets at ``t``.
+
+        ``t=None`` reads at the newest claimed tick.  Buckets with tick in
+        ``(read_tick - W, read_tick]`` merge in increasing-tick order from
+        the engine identity (a fixed association, so repeated reads are
+        bitwise reproducible); every other slot — empty, expired, or claimed
+        by a tick later than ``t`` — is excluded, which is what makes slot
+        reuse safe.  With ``decay`` on the engine and an explicit ``t``, the
+        merged state's clock is then advanced to ``t``.
+        """
+        read_tick = ws.head if t is None else self.tick(t)
+        live = sorted(
+            (int(tk), slot)
+            for slot, tk in enumerate(ws.slot_tick)
+            if tk >= 0 and read_tick - self.buckets < tk <= read_tick
+        )
+        out = self.engine.init_state()
+        for _, slot in live:
+            out = self.engine.merge(out, ws.buckets[slot])
+        if self.engine.decay is not None and t is not None:
+            out = self.engine.decay_to(out, float(t))
+        return out
+
+    def finalize(self, ws: WindowState, t=None):
+        """``read`` + engine finalize: the windowed ``(z, lower, upper)``."""
+        return self.engine.finalize(self.read(ws, t))
+
+    # -- fleet tenant surgery ------------------------------------------------
+
+    def tenant_column(self, ws: WindowState, tenant: int):
+        """Tenant's per-slot rows (tuple of W single-engine states) — what
+        evict checkpoints alongside the lifetime row."""
+        return tuple(
+            self.engine.tenant_state(b, tenant) for b in ws.buckets
+        )
+
+    def set_tenant_column(self, ws: WindowState, tenant: int, column):
+        """Write a tenant's W per-slot rows back (restore path)."""
+        if len(column) != self.buckets:
+            raise ValueError(
+                f"column has {len(column)} rows for {self.buckets} buckets"
+            )
+        bks = tuple(
+            self.engine.set_tenant(b, tenant, row)
+            for b, row in zip(ws.buckets, column)
+        )
+        return dataclasses.replace(ws, buckets=bks)
+
+    def reset_tenant(self, ws: WindowState, tenant: int):
+        """Tenant's rows to identity in every bucket (post-eviction hole).
+        Slot bookkeeping is fleet-global and unchanged — other tenants keep
+        their buckets."""
+        bks = tuple(
+            self.engine.reset_tenant(b, tenant) for b in ws.buckets
+        )
+        return dataclasses.replace(ws, buckets=bks)
+
+    def state_bytes(self, ws: WindowState) -> int:
+        """Resident bytes of the whole ring (W buckets)."""
+        import jax
+
+        return int(
+            sum(
+                leaf.size * leaf.dtype.itemsize
+                for b in ws.buckets
+                for leaf in jax.tree_util.tree_leaves(b)
+            )
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"SketchWindow(W={self.buckets}, bucket_ticks={self.bucket_ticks}"
+            f", engine={self.engine!r})"
+        )

@@ -54,6 +54,20 @@ class SketchJobSpec:
     # LRU capacity of the decode-on-demand cache (decoded models, keyed on
     # (tenant, state-version)); 0 disables caching.
     decode_cache_entries: int = 256
+    # -- temporal sketching (core.engine decay / core.window) ---------------
+    # Exponential decay base gamma in (0, 1] for the timestamped state
+    # transform; None = lifetime sketch.
+    decay: float | None = None
+    # W > 0 turns on the bucketed ring-of-sketches window (core.window):
+    # reads merge the last W buckets; 0 = no window.
+    window_buckets: int = 0
+    # Width of one window bucket on the t axis (must be positive when
+    # window_buckets > 0).
+    window_bucket_ticks: float = 1.0
+    # CF-distance drift bound for unattended fleet maintenance
+    # (FleetService): on breach the tenant's cached decode is invalidated
+    # and re-decoded (counter fleet.redecode.drift); None = no maintenance.
+    drift_threshold: float | None = None
 
     def validate(self) -> "SketchJobSpec":
         from repro.core.decoders import get_decoder
@@ -101,6 +115,24 @@ class SketchJobSpec:
                 f"fleet jobs (n_tenants={self.n_tenants}) run on the "
                 f"vmapped xla|pallas backends, got {self.backend!r}"
             )
+        if self.decay is not None and not 0.0 < self.decay <= 1.0:
+            raise ValueError(
+                f"decay must be in (0, 1], got {self.decay!r}"
+            )
+        if self.window_buckets < 0:
+            raise ValueError(
+                f"window_buckets must be >= 0, got {self.window_buckets}"
+            )
+        if self.window_buckets > 0 and not self.window_bucket_ticks > 0:
+            raise ValueError(
+                f"window_bucket_ticks must be positive, got "
+                f"{self.window_bucket_ticks}"
+            )
+        if self.drift_threshold is not None and not self.drift_threshold > 0:
+            raise ValueError(
+                f"drift_threshold must be positive, got "
+                f"{self.drift_threshold!r}"
+            )
         return self
 
     def ckm_overrides(self) -> dict:
@@ -113,6 +145,7 @@ class SketchJobSpec:
             "sketch_quantization": self.sketch_quantization,
             "freq_op": self.freq_op,
             "decoder": self.decoder,
+            "decay": self.decay,
         }
 
     def describe(self) -> str:
@@ -128,6 +161,14 @@ class SketchJobSpec:
                 f"(axis={self.tenant_shard_axis},"
                 f"cache={self.decode_cache_entries})"
             )
+        if self.decay is not None:
+            base += f" decay={self.decay}"
+        if self.window_buckets > 0:
+            base += (
+                f" window={self.window_buckets}x{self.window_bucket_ticks}"
+            )
+        if self.drift_threshold is not None:
+            base += f" drift_threshold={self.drift_threshold}"
         return base
 
 

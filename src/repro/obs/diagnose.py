@@ -87,11 +87,17 @@ def sketch_drift(z_live, centroids, weights, w) -> float:
     functions, so ``||z_live - z_model|| / ||z_live||`` is scale-free: ~0 on
     a stationary stream (up to decode residual + O(1/sqrt N) sampling
     noise), O(1) once the stream moves away from the decoded model.
+
+    An all-zero live sketch — what an empty or fully-decayed state finalizes
+    to (the engine's ``weight_sum -> 0`` guard) — scores a defined 0.0, not
+    the 0/0 the raw ratio would produce: with no live evidence there is
+    nothing to drift from.
     """
     z_live = jnp.asarray(z_live, jnp.float32)
     z_model = model_sketch(centroids, weights, w)
-    denom = jnp.maximum(jnp.linalg.norm(z_live), 1e-12)
-    return float(jnp.linalg.norm(z_live - z_model) / denom)
+    num = jnp.linalg.norm(z_live - z_model)
+    den = jnp.linalg.norm(z_live)
+    return float(jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0))
 
 
 def matched_distance(a, b, weights_a=None) -> float:

@@ -65,6 +65,7 @@ class FleetServiceStats:
     decode_cache_evictions: int = 0  # LRU entries dropped at capacity
     evictions: int = 0
     restores: int = 0
+    drift_redecodes: int = 0  # decodes forced by a drift_threshold breach
 
     @property
     def hit_rate(self) -> float:
@@ -85,6 +86,14 @@ class FleetService:
         by :meth:`evict`).
     decode_key : PRNG key for decoder inits; tenant t decodes under
         ``fold_in(decode_key, t)`` so decodes are deterministic per tenant.
+    drift_threshold : optional CF-distance bound for unattended drift
+        maintenance.  When set, every :meth:`flush` scores the flushed
+        tenants' live sketches against their *cached* decodes
+        (``obs.diagnose.sketch_drift``); a tenant over the bound has its
+        cache entries invalidated and is re-decoded immediately (counter
+        ``fleet.redecode.drift``).  Tenants without a cached decode are
+        never scored — maintenance refreshes stale models, it does not
+        force first decodes.
     """
 
     def __init__(
@@ -95,7 +104,12 @@ class FleetService:
         decode_cache_entries: int = 256,
         checkpoint_dir: str | Path | None = None,
         decode_key: jax.Array | None = None,
+        drift_threshold: float | None = None,
     ):
+        if drift_threshold is not None and not drift_threshold > 0:
+            raise ValueError(
+                f"drift_threshold must be positive, got {drift_threshold!r}"
+            )
         self.engine = engine
         if decode_config.decoder == "clompr":
             decode_config = dataclasses.replace(
@@ -110,10 +124,13 @@ class FleetService:
         self.decode_key = (
             decode_key if decode_key is not None else jax.random.PRNGKey(0)
         )
+        self.drift_threshold = (
+            None if drift_threshold is None else float(drift_threshold)
+        )
         self.stats = FleetServiceStats()
         self._versions = np.zeros(engine.n_tenants, np.int64)
         self._cache: OrderedDict[tuple[int, int], DecodeResult] = OrderedDict()
-        self._pending: list[tuple[int, np.ndarray]] = []
+        self._pending: list[tuple[int, np.ndarray, float | None]] = []
         self._evicted: set[int] = set()
 
     # -- versions -----------------------------------------------------------
@@ -128,14 +145,23 @@ class FleetService:
 
     # -- ingest -------------------------------------------------------------
 
-    def submit(self, tenant: int, batch) -> None:
-        """Queue one ``(tenant, (B, n) batch)`` request for the next flush."""
-        t = int(tenant)
-        if not 0 <= t < self.engine.n_tenants:
+    def submit(self, tenant: int, batch, t: float | None = None) -> None:
+        """Queue one ``(tenant, (B, n) batch)`` request for the next flush.
+
+        ``t`` is the request's tick for decay-enabled fleets (forwarded to
+        ``FleetEngine.ingest``); ``t=None`` folds at each tenant's current
+        stamp.  Passing ``t`` without decay is an error."""
+        tid = int(tenant)
+        if not 0 <= tid < self.engine.n_tenants:
             raise ValueError(
-                f"tenant {t} out of range [0, {self.engine.n_tenants})"
+                f"tenant {tid} out of range [0, {self.engine.n_tenants})"
             )
-        self._pending.append((t, batch))
+        if t is not None and self.engine.decay is None:
+            raise ValueError(
+                "submit(t=...) requires a decay-enabled fleet "
+                "(FleetEngine(..., decay=gamma))"
+            )
+        self._pending.append((tid, batch, None if t is None else float(t)))
 
     def flush(self, *, async_ingest: bool = False, prefetch: int = 2) -> int:
         """Fold every queued request into the stacked state; returns the
@@ -151,30 +177,37 @@ class FleetService:
         if not pending:
             return 0
         t_flush = time.perf_counter()
-        for t, _ in pending:
+        for t, _, _ in pending:
             if t in self._evicted:
                 self.restore(t)
 
         def requests():
-            for t, b in pending:
-                yield t, jnp.asarray(b, jnp.float32)
+            for t, b, ts in pending:
+                yield t, jnp.asarray(b, jnp.float32), ts
 
         stream: Iterable = requests()
         if async_ingest:
             stream = ingest_mod.prefetched(
                 requests(),
                 prefetch,
-                place=lambda tb: (tb[0], jax.device_put(tb[1])),
+                place=lambda tb: (tb[0], jax.device_put(tb[1]), tb[2]),
             )
 
         group_ids: list[int] = []
         group_batches: list[jax.Array] = []
+        group_t: list[float | None] = [None]
 
         def dispatch():
             if not group_ids:
                 return
+            kwargs = {}
+            if self.engine.decay is not None:
+                kwargs["t"] = group_t[0]
             self.state = self.engine.ingest(
-                self.state, np.asarray(group_ids), jnp.stack(group_batches)
+                self.state,
+                np.asarray(group_ids),
+                jnp.stack(group_batches),
+                **kwargs,
             )
             self.stats.flushes += 1
             group_ids.clear()
@@ -185,11 +218,14 @@ class FleetService:
         with obs_trace.span(
             "fleet.flush", requests=len(pending), async_ingest=async_ingest
         ):
-            for t, b in stream:
-                if group_batches and b.shape != group_batches[0].shape:
+            for t, b, ts in stream:
+                if group_batches and (
+                    b.shape != group_batches[0].shape or ts != group_t[0]
+                ):
                     dispatch()  # ragged boundary: keep arrival order intact
                 group_ids.append(t)
                 group_batches.append(b)
+                group_t[0] = ts
                 self.stats.requests += 1
                 self.stats.points += int(b.shape[0])
             dispatch()
@@ -197,7 +233,7 @@ class FleetService:
                 # Sync so the flush span/histogram measure the fold, not its
                 # async dispatch; the untelemetered path keeps dispatching.
                 jax.block_until_ready(self.state)
-        self._touch(t for t, _ in pending)
+        self._touch(t for t, _, _ in pending)
         if obs_rt.ENABLED:
             from repro.obs import metrics as obs_metrics
 
@@ -205,12 +241,21 @@ class FleetService:
                 time.perf_counter() - t_flush
             )
             obs_metrics.counter("fleet.flush.requests").inc(len(pending))
+        if self.drift_threshold is not None:
+            self.maintain(set(t for t, _, _ in pending))
         return len(pending)
 
-    def ingest(self, tenant_ids, batches, *, async_ingest: bool = False) -> int:
+    def ingest(
+        self,
+        tenant_ids,
+        batches,
+        *,
+        async_ingest: bool = False,
+        t: float | None = None,
+    ) -> int:
         """Submit + flush in one call (aligned request arrays or lists)."""
-        for t, b in zip(tenant_ids, batches):
-            self.submit(int(t), b)
+        for tid, b in zip(tenant_ids, batches):
+            self.submit(int(tid), b, t)
         return self.flush(async_ingest=async_ingest)
 
     def merge_partial(self, tenant: int, partial) -> None:
@@ -273,6 +318,19 @@ class FleetService:
     def cache_len(self) -> int:
         return len(self._cache)
 
+    def served_model(self, tenant: int) -> DecodeResult | None:
+        """The decoded model this tenant is currently being served — its most
+        recently used cache entry, at whatever state-version it was decoded.
+        Returns None when the tenant has no cached decode (nothing is being
+        served; :meth:`decode` would have to run).  Never decodes: this is
+        the read-only probe :meth:`drift` and the maintenance loop score
+        staleness against."""
+        t = int(tenant)
+        for ct, cv in reversed(self._cache):
+            if ct == t:
+                return self._cache[(ct, cv)]
+        return None
+
     def drift(self, tenant: int) -> float:
         """O(m) sketch-space drift of one tenant: how far the live sketch has
         moved from the decoded model currently being served.
@@ -281,17 +339,25 @@ class FleetService:
         (whatever version it was decoded at); with no cached decode, a fresh
         decode is taken — drift then just reports that decode's residual.
         Emits the ``fleet.drift{tenant=...}`` gauge when telemetry is on.
+
+        A tenant whose sketch is all-zero — fresh, reset, or fully decayed
+        (``weight_sum -> 0``) — has nothing to drift *from*: the score is
+        defined as 0.0 and no decode is attempted (decoding an empty sketch
+        with ±inf data bounds would manufacture NaN centroids).
         """
         from repro.obs.diagnose import sketch_drift
 
         t = int(tenant)
         if t in self._evicted:
             self.restore(t)
-        served = None
-        for ct, cv in reversed(self._cache):
-            if ct == t:
-                served = self._cache[(ct, cv)]
-                break
+        row = self.engine.tenant_state(self.state, t)
+        if not float(row.weight_sum) > 0:
+            if obs_rt.ENABLED:
+                from repro.obs import metrics as obs_metrics
+
+                obs_metrics.gauge("fleet.drift", tenant=t).set(0.0)
+            return 0.0
+        served = self.served_model(t)
         if served is None:
             served = self.decode(t)
         z_live, _, _ = self.engine.finalize_tenant(self.state, t)
@@ -303,6 +369,44 @@ class FleetService:
 
             obs_metrics.gauge("fleet.drift", tenant=t).set(score)
         return score
+
+    # -- drift-triggered maintenance ----------------------------------------
+
+    def maintain(self, tenants: Iterable[int] | None = None) -> int:
+        """Score drift for the given tenants (default: every tenant with a
+        cached decode) and re-decode the ones over ``drift_threshold``.
+
+        On a breach the tenant's cache entries are invalidated first, so the
+        forced decode can never be served from the LRU; the fresh model is
+        cached at the current version and ``fleet.redecode.drift`` counts
+        the event.  Only tenants that already have a cached decode are
+        scored — a tenant nobody has decoded has no served model to go
+        stale.  Returns the number of re-decodes.  :meth:`flush` calls this
+        automatically for the flushed tenants when ``drift_threshold`` is
+        set, which is what lets a fleet run unattended on drifting traffic.
+        """
+        if self.drift_threshold is None:
+            return 0
+        cached = {t for t, _ in self._cache}
+        check = (
+            sorted(cached)
+            if tenants is None
+            else sorted(cached & {int(t) for t in tenants})
+        )
+        redecoded = 0
+        for t in check:
+            if self.drift(t) <= self.drift_threshold:
+                continue
+            for key in [k for k in self._cache if k[0] == t]:
+                del self._cache[key]
+            self.decode(t)
+            redecoded += 1
+            self.stats.drift_redecodes += 1
+            if obs_rt.ENABLED:
+                from repro.obs import metrics as obs_metrics
+
+                obs_metrics.counter("fleet.redecode.drift").inc()
+        return redecoded
 
     # -- evict / restore ----------------------------------------------------
 
@@ -336,6 +440,7 @@ class FleetService:
                 "version": self.version(t),
                 "freq_op_spec": list(spec),
                 "quantized_bits": self.engine.bits,
+                "decay": self.engine.decay,
             },
         )
         self.state = self.engine.reset_tenant(self.state, t)
@@ -377,6 +482,11 @@ class FleetService:
                 f"tenant {t} checkpoint was written at "
                 f"{meta.get('quantized_bits')} bits, fleet runs "
                 f"{self.engine.bits}"
+            )
+        if meta.get("decay") != self.engine.decay:
+            raise ValueError(
+                f"tenant {t} checkpoint was written with decay="
+                f"{meta.get('decay')}, fleet runs decay={self.engine.decay}"
             )
         self.state = self.engine.set_tenant(self.state, t, row)
         self._versions[t] = int(meta.get("version", self.version(t)))

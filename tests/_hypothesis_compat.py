@@ -38,6 +38,25 @@ except ImportError:
             options = list(options)
             return _Strategy(lambda r: options[r.randrange(len(options))])
 
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(r):
+                size = r.randint(min_size, max_size)
+                out, seen, attempts = [], set(), 0
+                # bounded retry loop so unique=True over a small element
+                # domain cannot spin forever
+                while len(out) < size and attempts < 100 * max(size, 1):
+                    v = elements.draw(r)
+                    attempts += 1
+                    if unique:
+                        if v in seen:
+                            continue
+                        seen.add(v)
+                    out.append(v)
+                return out
+
+            return _Strategy(draw)
+
     st = _Strategies()
 
     def settings(max_examples: int = 10, **_ignored):

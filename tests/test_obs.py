@@ -350,14 +350,16 @@ def test_fit_streaming_jsonl_acceptance(tmp_path, blobs3):
 # ---------------------------------------------------------------------------
 
 
-def _fleet_service(cache_entries=2, n_tenants=3, m=32, n=2, decode_cfg=None):
+def _fleet_service(cache_entries=2, n_tenants=3, m=32, n=2, decode_cfg=None,
+                   decay=None, drift_threshold=None):
     specs = fl.fleet_specs(jax.random.PRNGKey(0), n_tenants, "dense", m, n, 1.0)
-    eng = fl.FleetEngine(specs)
+    eng = fl.FleetEngine(specs, decay=decay)
     cfg = decode_cfg or ckm_mod.CKMConfig(
         k=2, decoder="sketch_shift", shift_candidates=2, shift_steps=3,
         shift_polish_steps=2, nnls_iters=4,
     )
-    return FleetService(eng, cfg, decode_cache_entries=cache_entries)
+    return FleetService(eng, cfg, decode_cache_entries=cache_entries,
+                        drift_threshold=drift_threshold)
 
 
 def test_fleet_lru_accounting_matches_hand_simulation(rng):
@@ -437,6 +439,43 @@ def test_fleet_drift_gauge_stationary_vs_shifted(rng):
     obs.disable()
     assert shifted > 2.0 * stationary
     assert obs.snapshot()["fleet.drift{tenant=0}"] == pytest.approx(shifted)
+
+
+def test_fleet_drift_redecode_counter(rng):
+    """ISSUE 9: unattended maintenance — when a decayed fleet's flush sees a
+    tenant breach drift_threshold it invalidates + re-decodes, and the event
+    lands both in stats.drift_redecodes and the fleet.redecode.drift
+    counter.  Also pins the all-zero-sketch regression: drift on a fresh
+    tenant is a defined 0.0 gauge, never NaN."""
+    svc = _fleet_service(
+        cache_entries=4, m=48, decay=0.5, drift_threshold=0.25,
+        decode_cfg=ckm_mod.CKMConfig(k=2, m=48, shift_steps=40,
+                                     shift_polish_steps=100, nnls_iters=50),
+    )
+    blob = lambda c, s: jnp.asarray(c) + 0.2 * jax.random.normal(
+        jax.random.fold_in(rng, s), (300, 2)
+    )
+    svc.submit(0, blob([3.0, 3.0], 1), t=0.0)
+    svc.flush()
+    svc.decode(0)
+    assert svc.stats.drift_redecodes == 0
+    obs.enable()
+    # Four ticks of decay (old mass -> 6%) plus a mean shift: the served
+    # model is now stale, the auto-maintain on flush must catch it.
+    svc.submit(0, blob([9.0, -9.0], 2), t=4.0)
+    svc.flush()
+    obs.disable()
+    assert svc.stats.drift_redecodes >= 1
+    snap = obs.snapshot()
+    assert snap["fleet.redecode.drift"] == svc.stats.drift_redecodes
+
+    # Regression (ISSUE 9): an all-zero live sketch has nothing to drift
+    # from — score and gauge are a defined 0.0, with no decode attempted.
+    obs.enable()
+    score = svc.drift(1)
+    obs.disable()
+    assert score == 0.0 and not np.isnan(score)
+    assert obs.snapshot()["fleet.drift{tenant=1}"] == 0.0
 
 
 # ---------------------------------------------------------------------------
