@@ -36,6 +36,27 @@ Tenant state surgery (``tenant_state`` / ``set_tenant`` / ``reset_tenant``)
 is what eviction/restore builds on: a cold tenant's row is checkpointed
 (state leaves + spec), reset to the monoid identity, and scattered back in
 on demand — see ``repro.serve.fleet_service``.
+
+Mesh sharding: tenant parallelism
+---------------------------------
+``FleetEngine(sharding="mesh", tenant_shards=p)`` splits the stacked state
+over a p-device mesh along ``tenant_shard_axis``: device s owns the
+contiguous block of ``n_tenants / p`` tenant rows ``[s·block, (s+1)·block)``
+— float and quantized int32 twins, the stacked operator leaves, dither rows,
+and decay stamps all shard together (every fleet leaf leads with the tenant
+axis, so one ``P(axis)`` spec rule covers the tree).  Tenants never talk to
+each other, so this is *pure* data parallelism: ``update``/``finalize`` run
+through ``utils.compat.shard_map`` (never ``jax.shard_map`` directly — repo
+rule) with the same vmapped per-tenant trace inside each shard — one
+dispatch per device, zero cross-shard collectives in the compiled program
+(:meth:`FleetEngine.mesh_update_hlo` exposes the HLO so tests/benchmarks can
+assert that), and per-tenant results stay bitwise equal to the unsharded
+stack and to isolated engines.  ``merge`` and the tenant surgery are
+elementwise/row-wise, so XLA keeps them on the owning shard without an
+explicit shard_map; ``ingest`` scatters land on the owning shard's rows
+(``serve.fleet_service`` routes interleaved requests host-side so each
+dispatch touches one shard's block).  Wire costs of the remaining
+control-plane paths are modeled by ``core.topology.fleet_wire_cost_model``.
 """
 
 from __future__ import annotations
@@ -59,6 +80,7 @@ from repro.core.engine import (
 
 __all__ = [
     "FLEET_BACKENDS",
+    "FLEET_SHARDINGS",
     "FleetEngine",
     "fleet_specs",
     "fleet_quantizers",
@@ -68,6 +90,12 @@ __all__ = [
 # The fleet batches per-tenant compute with vmap; the sharded backend manages
 # its own mesh collective and is not a per-tenant trace to batch.
 FLEET_BACKENDS = ("xla", "pallas")
+
+# How the stacked state is placed: "none" keeps every tenant row on the
+# default device; "mesh" splits the tenant axis over a device mesh (the
+# per-tenant trace backend above stays orthogonal — both backends vmap
+# within each shard).
+FLEET_SHARDINGS = ("none", "mesh")
 
 
 def fleet_specs(
@@ -157,6 +185,20 @@ class FleetEngine:
         ``SketchEngine(decay=...)`` does per tenant.  ``update``/``ingest``
         then accept a keyword ``t`` and :meth:`decay_to` advances the whole
         fleet's clock in one dispatch.
+    sharding : ``"none"`` (default — the whole stack on one device) or
+        ``"mesh"`` — split the tenant axis over a device mesh so shard s
+        owns the contiguous rows ``[s·T/p, (s+1)·T/p)``.  Update/finalize
+        then run the vmapped trace *within each shard* through the
+        ``utils.compat.shard_map`` shim: one dispatch per device, zero
+        cross-shard collectives, bitwise the unsharded rows.
+    mesh : the 1-D mesh to shard over (``sharding="mesh"`` only).  Default:
+        ``parallel.sharding.tenant_mesh(tenant_shards, tenant_shard_axis)``
+        over the first ``tenant_shards`` local devices.
+    tenant_shards : shard count p — must divide ``n_tenants`` (matches
+        ``SketchJobSpec.tenant_shards`` validation).  Default: the given
+        mesh's axis size, else every local device.
+    tenant_shard_axis : mesh-axis name the tenant axis maps onto
+        (``SketchJobSpec.tenant_shard_axis``).
     """
 
     def __init__(
@@ -170,11 +212,24 @@ class FleetEngine:
         block_m: int = 512,
         interpret: bool | None = None,
         decay: float | None = None,
+        sharding: str = "none",
+        mesh=None,
+        tenant_shards: int | None = None,
+        tenant_shard_axis: str = "tenant",
     ):
         if backend not in FLEET_BACKENDS:
             raise ValueError(
                 f"fleet backend must be one of {FLEET_BACKENDS}, got "
                 f"{backend!r}"
+            )
+        if sharding not in FLEET_SHARDINGS:
+            raise ValueError(
+                f"fleet sharding must be one of {FLEET_SHARDINGS}, got "
+                f"{sharding!r}"
+            )
+        if sharding == "none" and (mesh is not None or tenant_shards not in (None, 1)):
+            raise ValueError(
+                "mesh=/tenant_shards= require FleetEngine(sharding='mesh')"
             )
         if decay is not None and not 0.0 < float(decay) <= 1.0:
             raise ValueError(f"decay must be in (0, 1], got {decay!r}")
@@ -217,6 +272,83 @@ class FleetEngine:
                     f"stacked dither shape {self.dither.shape} != "
                     f"{(self.n_tenants, self.m)}"
                 )
+        self.sharding = sharding
+        self.tenant_shard_axis = str(tenant_shard_axis)
+        self.mesh = None
+        self.tenant_shards = 1
+        self._tenant_sharding = None
+        self._mesh_update_jit = None
+        self._mesh_finalize_jit = None
+        if sharding == "mesh":
+            from repro.parallel.sharding import axis_extent, tenant_mesh
+
+            if mesh is None:
+                mesh = tenant_mesh(
+                    tenant_shards
+                    if tenant_shards is not None
+                    else len(jax.devices()),
+                    axis=self.tenant_shard_axis,
+                )
+            if self.tenant_shard_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh axes {mesh.axis_names} do not include the tenant "
+                    f"shard axis {self.tenant_shard_axis!r}"
+                )
+            p = axis_extent(mesh, (self.tenant_shard_axis,))
+            if tenant_shards is not None and int(tenant_shards) != p:
+                raise ValueError(
+                    f"tenant_shards={tenant_shards} but the mesh's "
+                    f"{self.tenant_shard_axis!r} axis has {p} devices"
+                )
+            if self.n_tenants % p:
+                raise ValueError(
+                    f"n_tenants={self.n_tenants} is not divisible by "
+                    f"tenant_shards={p}; every shard must hold an equal "
+                    "contiguous block of tenant rows"
+                )
+            self.mesh = mesh
+            self.tenant_shards = p
+            self._tenant_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(self.tenant_shard_axis)
+            )
+            # The stacked operator leaves and dither rows live with their
+            # tenants: placed once here, a shard's update never reads
+            # another device's memory.
+            self._stacked_op = jax.tree_util.tree_map(
+                lambda l: jax.device_put(l, self._tenant_sharding),
+                self._stacked_op,
+            )
+            self._op_leaves = jax.tree_util.tree_leaves(self._stacked_op)
+            if self.dither is not None:
+                self.dither = jax.device_put(
+                    self.dither, self._tenant_sharding
+                )
+
+    @property
+    def shard_rows(self) -> int:
+        """Tenant rows per shard (= n_tenants with ``sharding="none"``)."""
+        return self.n_tenants // self.tenant_shards
+
+    def owner_shard(self, tenant: int) -> int:
+        """The shard whose contiguous block holds ``tenant``'s row — what
+        ``serve.fleet_service`` partitions interleaved requests by."""
+        t = int(tenant)
+        if not 0 <= t < self.n_tenants:
+            raise ValueError(
+                f"tenant {t} out of range [0, {self.n_tenants})"
+            )
+        return t // self.shard_rows
+
+    def place_state(self, state):
+        """Pin a stacked state's leaves onto the tenant sharding (identity
+        for ``sharding="none"``).  ``init_state`` places automatically; use
+        this after building a stacked state host-side (restored checkpoints,
+        restacked rows) so the hot path starts on the owning devices."""
+        if self._tenant_sharding is None:
+            return state
+        return jax.tree_util.tree_map(
+            lambda l: jax.device_put(l, self._tenant_sharding), state
+        )
 
     @staticmethod
     def _try_spec(op: fo.FrequencyOperator) -> fo.FreqOpSpec | None:
@@ -279,9 +411,11 @@ class FleetEngine:
                 upper=jnp.full((t, n), -jnp.inf, jnp.float32),
                 count=jnp.zeros((t,), jnp.float32),
             )
-        if self.decay is None:
-            return base
-        return self._lift_parts(base, jnp.full((t,), -jnp.inf, jnp.float32))
+        if self.decay is not None:
+            base = self._lift_parts(
+                base, jnp.full((t,), -jnp.inf, jnp.float32)
+            )
+        return self.place_state(base)
 
     def _lift_parts(self, parts, stamps):
         """Wrap stacked base partials as decayed states stamped ``stamps``
@@ -395,6 +529,94 @@ class FleetEngine:
             weights = jnp.asarray(weights, jnp.float32)
         return jax.vmap(self._tenant_part)(stacked_op, x, weights)
 
+    # -- mesh-sharded hot path ----------------------------------------------
+
+    def _row_specs(self, tree):
+        """``P(tenant_shard_axis)`` per leaf — every fleet leaf leads with
+        the tenant axis (same rule as ``parallel.sharding.tenant_shard_specs``,
+        inlined to keep this module importable without the parallel pkg)."""
+        row = jax.sharding.PartitionSpec(self.tenant_shard_axis)
+        return jax.tree_util.tree_map(lambda _: row, tree)
+
+    def _mesh_update_fn(self, state):
+        """The shard-mapped update, built once per engine: each device runs
+        the SAME vmapped per-tenant trace over its contiguous block of rows
+        (so row t is bitwise the unsharded row t), and no collective ever
+        enters the program — tenants are independent."""
+        if self._mesh_update_jit is not None:
+            return self._mesh_update_jit
+        from repro.utils import compat
+
+        quantized, decayed = self.quantized, self.decay is not None
+
+        def body(st, op, x, aux, *stamps):
+            if quantized:
+                parts = jax.vmap(self._tenant_qpart)(op, aux, x)
+            else:
+                parts = jax.vmap(self._tenant_part)(op, x, aux)
+            if decayed:
+                parts = self._lift_parts(parts, stamps[0])
+            return eng_mod._merge_states(st, parts)
+
+        row = jax.sharding.PartitionSpec(self.tenant_shard_axis)
+        in_specs = (
+            self._row_specs(state),
+            self._row_specs(self._stacked_op),
+            row,
+            row,
+        ) + ((row,) if decayed else ())
+        fn = compat.shard_map(
+            body,
+            self.mesh,
+            in_specs=in_specs,
+            out_specs=self._row_specs(state),
+            check_vma=False,
+        )
+        self._mesh_update_jit = jax.jit(fn)
+        return self._mesh_update_jit
+
+    def _mesh_update_args(self, state, batches, weights, t):
+        """Validated ``(jitted_fn, operands)`` of the mesh update — shared by
+        :meth:`update` and :meth:`mesh_update_hlo`."""
+        x = jnp.asarray(batches, jnp.float32)
+        if x.ndim != 3 or x.shape[-1] != self.n:
+            raise ValueError(
+                f"batches must be (T, B, {self.n}), got {x.shape}"
+            )
+        if self.quantized:
+            if weights is not None:
+                raise ValueError(
+                    "quantized fleet states accumulate unit-weight integer "
+                    "counts; per-point weights are not representable"
+                )
+            aux = self.dither  # (T, m), placed with its tenants
+        elif weights is None:
+            aux = jnp.ones(x.shape[:2], jnp.float32)
+        else:
+            aux = jnp.asarray(weights, jnp.float32)
+        operands = (state, self._stacked_op, x, aux)
+        if self.decay is not None:
+            if t is None:
+                stamps = jnp.where(
+                    jnp.isfinite(state.stamp), state.stamp, 0.0
+                )
+            else:
+                stamps = jnp.broadcast_to(
+                    jnp.asarray(t, jnp.float32), (self.n_tenants,)
+                )
+            operands += (stamps,)
+        return self._mesh_update_fn(state), operands
+
+    def mesh_update_hlo(self, state, batches, weights=None, *, t=None) -> str:
+        """Compiled HLO of the shard-mapped :meth:`update` — the artifact
+        tests/benchmarks grep to assert the hot path carries ZERO cross-shard
+        collectives (no all-reduce/all-gather/collective-permute/all-to-all:
+        tenant sharding is pure data parallelism)."""
+        if self.sharding != "mesh":
+            raise ValueError("mesh_update_hlo requires sharding='mesh'")
+        fn, operands = self._mesh_update_args(state, batches, weights, t)
+        return fn.lower(*operands).compile().as_text()
+
     def update(self, state, batches, weights=None, *, t=None):
         """Fold one aligned block ``batches: (T, B, n)`` — one batch per
         tenant — into the stacked state in a single vmapped dispatch.
@@ -403,12 +625,17 @@ class FleetEngine:
         Under ``decay``, ``t`` is the block's tick — a scalar (every tenant)
         or ``(T,)`` (per tenant); ``t=None`` reuses each row's current stamp
         (empty rows resolve to tick 0), matching ``SketchEngine.update``.
+        With ``sharding="mesh"`` the same trace runs shard-mapped: one
+        dispatch per device over its own block, nothing on the wire.
         """
         if t is not None and self.decay is None:
             raise ValueError(
                 "update(t=...) requires a decay-enabled fleet "
                 "(FleetEngine(..., decay=gamma))"
             )
+        if self.sharding == "mesh":
+            fn, operands = self._mesh_update_args(state, batches, weights, t)
+            return fn(*operands)
         parts = self._parts(self._stacked_op, batches, weights)
         if self.decay is not None:
             if t is None:
@@ -428,8 +655,18 @@ class FleetEngine:
         return eng_mod._merge_states(a, b)
 
     def finalize(self, state):
-        """-> ``(z (T, 2m), lower (T, n), upper (T, n))``, all tenants."""
+        """-> ``(z (T, 2m), lower (T, n), upper (T, n))``, all tenants.
+        With ``sharding="mesh"`` the vmapped finalize runs within each
+        shard (shard-mapped, no collectives); outputs stay tenant-sharded.
+        """
         self._check_capacity(state)
+        if self.sharding == "mesh":
+            return self._mesh_finalize_fn(state)(state)
+        return self._finalize_vmapped(state)
+
+    def _finalize_vmapped(self, state):
+        """The vmapped whole-fleet finalize — the shard_map body reuses it
+        verbatim, which is what keeps sharded finalize bitwise."""
         if self.quantized:
             fin = (
                 eng_mod._finalize_decayed_quantized
@@ -440,6 +677,46 @@ class FleetEngine:
                 state, self.dither
             )
         return jax.vmap(eng_mod._finalize_state)(state)
+
+    def _mesh_finalize_fn(self, state):
+        if self._mesh_finalize_jit is not None:
+            return self._mesh_finalize_jit
+        from repro.utils import compat
+
+        quantized = self.quantized
+
+        def body(st, *dither):
+            if quantized:
+                fin = (
+                    eng_mod._finalize_decayed_quantized
+                    if isinstance(st, DecayedQuantizedSketchEngineState)
+                    else eng_mod._finalize_quantized
+                )
+                z, lo, hi = jax.vmap(
+                    functools.partial(fin, bits=self.bits)
+                )(st, dither[0])
+            else:
+                z, lo, hi = jax.vmap(eng_mod._finalize_state)(st)
+            return z, lo, hi
+
+        row = jax.sharding.PartitionSpec(self.tenant_shard_axis)
+        in_specs = (self._row_specs(state),) + (
+            (row,) if quantized else ()
+        )
+        fn = compat.shard_map(
+            body,
+            self.mesh,
+            in_specs=in_specs,
+            out_specs=(row, row, row),
+            check_vma=False,
+        )
+        jitted = jax.jit(fn)
+        if quantized:
+            dither = self.dither
+            self._mesh_finalize_jit = lambda st: jitted(st, dither)
+        else:
+            self._mesh_finalize_jit = jitted
+        return self._mesh_finalize_jit
 
     def _check_capacity(self, state):
         if not self.quantized:
@@ -637,7 +914,13 @@ class FleetEngine:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         q = f", bits={self.bits}" if self.quantized else ""
+        s = (
+            f", shards={self.tenant_shards}x{self.shard_rows}rows"
+            f"(axis={self.tenant_shard_axis!r})"
+            if self.sharding == "mesh"
+            else ""
+        )
         return (
             f"FleetEngine(T={self.n_tenants}, n={self.n}, m={self.m}, "
-            f"backend={self.backend!r}{q})"
+            f"backend={self.backend!r}{q}{s})"
         )

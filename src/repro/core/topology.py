@@ -52,6 +52,7 @@ __all__ = [
     "StragglerMerger",
     "axis_reduce",
     "wire_cost_model",
+    "fleet_wire_cost_model",
 ]
 
 # Elementwise combine ops a reduction may carry.  "sum" is the monoid's
@@ -319,4 +320,56 @@ def wire_cost_model(state_bytes: int, p: int, topology: str) -> dict:
         "p": p,
         "bytes_per_device": bytes_dev,
         "hops": hops,
+    }
+
+
+def fleet_wire_cost_model(
+    row_bytes: int,
+    n_tenants: int,
+    tenant_shards: int,
+    topology: str = "tree",
+) -> dict:
+    """Wire cost of a tenant-sharded fleet's data paths.
+
+    Sharding the tenant axis is pure data parallelism — every tenant's whole
+    state lives on exactly one shard, so the serving hot path (update /
+    ingest / finalize) moves **zero** bytes between shards
+    (``steady_state_bytes``; the compiled program carries no collectives).
+    What remains on the wire is the control plane, per tenant row of
+    ``row_bytes`` (``quantize.state_wire_bytes`` for the quantized twin):
+
+    - **checkpoint** (evict/restore): one tenant's O(m) row moves between
+      the host and its *owning* shard only — ``row_bytes`` over one
+      host-device link, independent of the shard count.
+    - **broadcast** (shipping a spec/config/decode artifact to every
+      shard): the reverse of ``merge_schedule``'s reduce plan — each of the
+      ``p - 1`` non-root shards receives the row once
+      (``broadcast_bytes_total``), serialized over the plan's round count
+      (tree: ``ceil(log2 p)``, ring/flat: ``p - 1``).
+
+    ``rows_per_shard``/``shard_state_bytes`` give the per-device residency
+    the contiguous-block placement implies.  Documented as the fleet-sharding
+    wire table in ``docs/scaling.md``.
+    """
+    get_topology(topology)  # validate the name
+    p = int(tenant_shards)
+    if p < 1:
+        raise ValueError(f"tenant_shards must be >= 1, got {tenant_shards}")
+    if n_tenants < 1 or n_tenants % p:
+        raise ValueError(
+            f"n_tenants={n_tenants} must be a positive multiple of "
+            f"tenant_shards={p} (contiguous equal blocks per shard)"
+        )
+    rows = n_tenants // p
+    return {
+        "topology": topology,
+        "tenant_shards": p,
+        "rows_per_shard": rows,
+        "row_bytes": int(row_bytes),
+        "shard_state_bytes": int(row_bytes) * rows,
+        "steady_state_bytes": 0,
+        "checkpoint_bytes": int(row_bytes),
+        "checkpoint_hops": 1,
+        "broadcast_bytes_total": float(row_bytes * (p - 1)),
+        "broadcast_hops": len(merge_schedule(p, topology)) if p > 1 else 0,
     }

@@ -148,6 +148,33 @@ class SketchJobSpec:
             "decay": self.decay,
         }
 
+    def fleet_kwargs(self) -> dict:
+        """Kwargs to splat into ``FleetEngine(specs, **...)`` for this job.
+
+        ``tenant_shards > 1`` turns on mesh sharding (``sharding="mesh"``)
+        over ``tenant_shard_axis`` — the engine builds/validates the device
+        mesh itself, so the caller only names the extent here."""
+        self.validate()
+        kwargs: dict = {"backend": self.backend, "decay": self.decay}
+        if self.tenant_shards > 1:
+            kwargs.update(
+                sharding="mesh",
+                tenant_shards=self.tenant_shards,
+                tenant_shard_axis=self.tenant_shard_axis,
+            )
+        return kwargs
+
+    def service_kwargs(self) -> dict:
+        """Kwargs to splat into ``FleetService(engine, config, **...)``:
+        the decode-cache size, drift maintenance bound, and window shape."""
+        self.validate()
+        return {
+            "decode_cache_entries": self.decode_cache_entries,
+            "drift_threshold": self.drift_threshold,
+            "window_buckets": self.window_buckets,
+            "window_bucket_ticks": self.window_bucket_ticks,
+        }
+
     def describe(self) -> str:
         base = (
             f"backend={self.backend} topology={self.reduce_topology} "

@@ -87,6 +87,43 @@ def axis_extent(mesh: Mesh, axes) -> int:
     return ext
 
 
+def tenant_mesh(shards: int, axis: str = "tenant", devices=None) -> Mesh:
+    """1-D mesh for fleet tenant sharding: ``shards`` devices on one axis.
+
+    The fleet's stacked state (``core.fleet.FleetEngine(sharding="mesh")``)
+    splits its leading tenant axis over this mesh — each device owns one
+    contiguous block of ``n_tenants / shards`` tenant rows.  Tenant sharding
+    is pure data parallelism, so a single axis is always enough; the axis
+    name defaults to ``SketchJobSpec.tenant_shard_axis``'s default.
+    """
+    import numpy as np
+
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if shards > len(devices):
+        raise ValueError(
+            f"tenant_mesh needs {shards} devices, only {len(devices)} "
+            "available (force host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "jax initialises)"
+        )
+    return Mesh(np.asarray(devices[:shards]), (axis,))
+
+
+def tenant_shard_specs(tree: Any, axis: str = "tenant") -> Any:
+    """``P(axis)`` for every leaf of a stacked fleet pytree.
+
+    Every fleet leaf — state accumulators ``(T, m)``, bounds ``(T, n)``,
+    scalars-per-tenant ``(T,)``, stacked operator leaves, dither rows —
+    carries the tenant axis leading, so one spec rule covers the whole
+    tree: shard dim 0 over ``axis``, replicate the rest.  Feed the result
+    to :func:`to_shardings` for placement or to ``compat.shard_map``
+    in/out specs.
+    """
+    return jax.tree_util.tree_map(lambda _: P(axis), tree)
+
+
 def _resolve(spec_tags, shape, mesh, fsdp_axis, stacked: bool):
     """Tags -> PartitionSpec with divisibility guards.  ``stacked``: the leaf
     has a leading layer-group axis (from scan stacking) that stays unsharded."""

@@ -21,6 +21,27 @@ evict/restore is invisible in the sketch algebra.
 
 Default decoder: ``"sketch_shift"`` (Belhadji & Gribonval 2023) — the cheap
 decoder the hot decode path wants; any registered decoder name works.
+
+Shard-aware routing: when the engine is mesh-sharded
+(``FleetEngine(sharding="mesh")``), :meth:`FleetService.flush` partitions the
+interleaved request stream **host-side** by owning shard
+(:func:`shard_partition`) before grouping, so every segment-scatter dispatch
+touches exactly one shard's contiguous block of rows.  Per-tenant arrival
+order is preserved (a tenant's shard is fixed), which keeps the bitwise
+isolation contract; only the never-observable cross-tenant interleaving
+across shards is reordered.  Decode-on-demand, drift maintenance, and
+evict/restore go through the engine's tenant surgery, which reads/writes the
+owning shard's rows — the ``(tenant, version)`` LRU and drift-triggered
+re-decode work unchanged.
+
+Windowed serving: ``FleetService(window_buckets=W)`` additionally folds every
+flush into a ``core.window.SketchWindow`` ring over the same engine (requests
+must then carry their tick: ``submit(tenant, batch, t=...)``), and
+evict/restore checkpoints the tenant's W bucket-column rows alongside the
+lifetime row — bucket count/ticks are validated against the manifest meta,
+and on restore only columns whose slot still holds the checkpointed tick
+re-enter the ring (slots reclaimed by newer ticks hold other tenants' fresh
+buckets; the evicted tenant's data there is expired by definition).
 """
 
 from __future__ import annotations
@@ -41,7 +62,29 @@ from repro.core import fleet as fleet_mod
 from repro.core import ingest as ingest_mod
 from repro.obs import runtime as obs_rt
 
-__all__ = ["DecodeResult", "FleetServiceStats", "FleetService"]
+__all__ = [
+    "DecodeResult",
+    "FleetServiceStats",
+    "FleetService",
+    "shard_partition",
+]
+
+
+def shard_partition(pending, owner, n_shards: int):
+    """Stable host-side partition of ``(tenant, ...)`` requests by shard.
+
+    Returns the requests regrouped shard 0 first, preserving each shard's —
+    and therefore each *tenant's* — internal arrival order (``owner`` is a
+    function of the tenant id alone).  With a mesh-sharded engine this is
+    what makes every flush dispatch's scatter land inside one shard's
+    contiguous row block; the cross-shard reordering it introduces touches
+    only request pairs of different tenants, whose relative order was never
+    observable (different rows of the stacked monoid state).
+    """
+    buckets: list[list] = [[] for _ in range(n_shards)]
+    for req in pending:
+        buckets[owner(req[0])].append(req)
+    return [req for bucket in buckets for req in bucket], buckets
 
 
 class DecodeResult(NamedTuple):
@@ -87,13 +130,23 @@ class FleetService:
     decode_key : PRNG key for decoder inits; tenant t decodes under
         ``fold_in(decode_key, t)`` so decodes are deterministic per tenant.
     drift_threshold : optional CF-distance bound for unattended drift
-        maintenance.  When set, every :meth:`flush` scores the flushed
-        tenants' live sketches against their *cached* decodes
-        (``obs.diagnose.sketch_drift``); a tenant over the bound has its
-        cache entries invalidated and is re-decoded immediately (counter
-        ``fleet.redecode.drift``).  Tenants without a cached decode are
-        never scored — maintenance refreshes stale models, it does not
-        force first decodes.
+        maintenance — a positive scalar (one bound for the whole fleet) or
+        a per-tenant array of shape ``(n_tenants,)`` so hot tenants can
+        re-decode more aggressively than cold ones.  When set, every
+        :meth:`flush` scores the flushed tenants' live sketches against
+        their *cached* decodes (``obs.diagnose.sketch_drift``); a tenant
+        over its bound has its cache entries invalidated and is re-decoded
+        immediately (counter ``fleet.redecode.drift``; the applied bound is
+        exported as the per-tenant gauge ``fleet.drift.threshold``).
+        Tenants without a cached decode are never scored — maintenance
+        refreshes stale models, it does not force first decodes.
+    window_buckets, window_bucket_ticks : ``window_buckets=W > 0`` attaches
+        a W-bucket ``core.window.SketchWindow`` ring over the same engine
+        (``SketchJobSpec.window_buckets`` / ``window_bucket_ticks``): every
+        flush folds into the lifetime state AND the request tick's bucket,
+        so windowed reads/finalizes are available next to lifetime decodes,
+        and evict/restore carries the tenant's bucket columns.  Windowed
+        submissions must pass their tick (``submit(..., t=...)``).
     """
 
     def __init__(
@@ -104,12 +157,10 @@ class FleetService:
         decode_cache_entries: int = 256,
         checkpoint_dir: str | Path | None = None,
         decode_key: jax.Array | None = None,
-        drift_threshold: float | None = None,
+        drift_threshold=None,
+        window_buckets: int = 0,
+        window_bucket_ticks: float = 1.0,
     ):
-        if drift_threshold is not None and not drift_threshold > 0:
-            raise ValueError(
-                f"drift_threshold must be positive, got {drift_threshold!r}"
-            )
         self.engine = engine
         if decode_config.decoder == "clompr":
             decode_config = dataclasses.replace(
@@ -124,9 +175,43 @@ class FleetService:
         self.decode_key = (
             decode_key if decode_key is not None else jax.random.PRNGKey(0)
         )
-        self.drift_threshold = (
-            None if drift_threshold is None else float(drift_threshold)
-        )
+        if drift_threshold is None:
+            self.drift_threshold = None
+        else:
+            arr = np.asarray(drift_threshold, np.float64)
+            if arr.ndim == 0:
+                if not arr > 0:
+                    raise ValueError(
+                        f"drift_threshold must be positive, got "
+                        f"{drift_threshold!r}"
+                    )
+                self.drift_threshold = float(arr)
+            else:
+                if arr.shape != (engine.n_tenants,):
+                    raise ValueError(
+                        f"per-tenant drift_threshold must have shape "
+                        f"({engine.n_tenants},), got {arr.shape}"
+                    )
+                if not np.all(arr > 0):
+                    raise ValueError(
+                        "per-tenant drift_threshold entries must all be "
+                        "positive"
+                    )
+                self.drift_threshold = arr
+        if window_buckets < 0:
+            raise ValueError(
+                f"window_buckets must be >= 0, got {window_buckets}"
+            )
+        self.window = None
+        self.window_state = None
+        if window_buckets:
+            from repro.core.window import SketchWindow
+
+            self.window = SketchWindow(
+                engine, int(window_buckets),
+                bucket_ticks=float(window_bucket_ticks),
+            )
+            self.window_state = self.window.init_state()
         self.stats = FleetServiceStats()
         self._versions = np.zeros(engine.n_tenants, np.int64)
         self._cache: OrderedDict[tuple[int, int], DecodeResult] = OrderedDict()
@@ -148,18 +233,26 @@ class FleetService:
     def submit(self, tenant: int, batch, t: float | None = None) -> None:
         """Queue one ``(tenant, (B, n) batch)`` request for the next flush.
 
-        ``t`` is the request's tick for decay-enabled fleets (forwarded to
-        ``FleetEngine.ingest``); ``t=None`` folds at each tenant's current
-        stamp.  Passing ``t`` without decay is an error."""
+        ``t`` is the request's tick for decay-enabled or windowed fleets
+        (forwarded to ``FleetEngine.ingest`` / the window's bucket ring);
+        ``t=None`` folds at each tenant's current stamp.  Passing ``t``
+        without decay or a window is an error; a windowed service requires
+        it (every request must name its bucket)."""
         tid = int(tenant)
         if not 0 <= tid < self.engine.n_tenants:
             raise ValueError(
                 f"tenant {tid} out of range [0, {self.engine.n_tenants})"
             )
-        if t is not None and self.engine.decay is None:
+        if t is not None and self.engine.decay is None and self.window is None:
             raise ValueError(
                 "submit(t=...) requires a decay-enabled fleet "
-                "(FleetEngine(..., decay=gamma))"
+                "(FleetEngine(..., decay=gamma)) or a windowed service "
+                "(FleetService(..., window_buckets=W))"
+            )
+        if t is None and self.window is not None:
+            raise ValueError(
+                "a windowed FleetService needs every request's tick: "
+                "submit(tenant, batch, t=...)"
             )
         self._pending.append((tid, batch, None if t is None else float(t)))
 
@@ -172,6 +265,12 @@ class FleetService:
         ONE segment-scatter dispatch; ``async_ingest=True`` threads the
         request stream through ``core.ingest.prefetched`` so host->device
         staging of batch r+1 overlaps the fold of batch r.
+
+        With a mesh-sharded engine the flush is first partitioned by owning
+        shard (:func:`shard_partition`) so each dispatch's scatter touches
+        one shard's contiguous rows; per-tenant order — the observable one —
+        is untouched.  A windowed service additionally folds every dispatch
+        into its tick's bucket.
         """
         pending, self._pending = self._pending, []
         if not pending:
@@ -180,6 +279,18 @@ class FleetService:
         for t, _, _ in pending:
             if t in self._evicted:
                 self.restore(t)
+        if self.engine.tenant_shards > 1:
+            pending, by_shard = shard_partition(
+                pending, self.engine.owner_shard, self.engine.tenant_shards
+            )
+            if obs_rt.ENABLED:
+                from repro.obs import metrics as obs_metrics
+
+                for s, bucket in enumerate(by_shard):
+                    if bucket:
+                        obs_metrics.counter(
+                            "fleet.flush.shard_requests", shard=s
+                        ).inc(len(bucket))
 
         def requests():
             for t, b, ts in pending:
@@ -200,15 +311,16 @@ class FleetService:
         def dispatch():
             if not group_ids:
                 return
+            ids = np.asarray(group_ids)
+            stacked = jnp.stack(group_batches)
             kwargs = {}
             if self.engine.decay is not None:
                 kwargs["t"] = group_t[0]
-            self.state = self.engine.ingest(
-                self.state,
-                np.asarray(group_ids),
-                jnp.stack(group_batches),
-                **kwargs,
-            )
+            self.state = self.engine.ingest(self.state, ids, stacked, **kwargs)
+            if self.window is not None:
+                self.window_state = self.window.ingest(
+                    self.window_state, ids, stacked, t=group_t[0]
+                )
             self.stats.flushes += 1
             group_ids.clear()
             group_batches.clear()
@@ -372,6 +484,16 @@ class FleetService:
 
     # -- drift-triggered maintenance ----------------------------------------
 
+    def threshold(self, tenant: int) -> float | None:
+        """The drift bound applied to one tenant: the fleet-wide scalar, the
+        tenant's entry of a per-tenant array, or None when maintenance is
+        off."""
+        if self.drift_threshold is None:
+            return None
+        if isinstance(self.drift_threshold, float):
+            return self.drift_threshold
+        return float(self.drift_threshold[int(tenant)])
+
     def maintain(self, tenants: Iterable[int] | None = None) -> int:
         """Score drift for the given tenants (default: every tenant with a
         cached decode) and re-decode the ones over ``drift_threshold``.
@@ -395,7 +517,12 @@ class FleetService:
         )
         redecoded = 0
         for t in check:
-            if self.drift(t) <= self.drift_threshold:
+            thr = self.threshold(t)
+            if obs_rt.ENABLED:
+                from repro.obs import metrics as obs_metrics
+
+                obs_metrics.gauge("fleet.drift.threshold", tenant=t).set(thr)
+            if self.drift(t) <= thr:
                 continue
             for key in [k for k in self._cache if k[0] == t]:
                 del self._cache[key]
@@ -420,7 +547,9 @@ class FleetService:
     def evict(self, tenant: int) -> None:
         """Checkpoint a cold tenant's row (state + operator spec) and reset
         the row to the monoid identity — its fleet slot is reusable scratch
-        until the tenant returns."""
+        until the tenant returns.  A windowed service checkpoints the
+        tenant's bucket-column rows alongside the lifetime row and resets
+        them too."""
         t = int(tenant)
         if t in self._evicted:
             return
@@ -431,19 +560,31 @@ class FleetService:
                 "spec, not the operator leaves"
             )
         row = self.engine.tenant_state(self.state, t)
+        meta = {
+            "tenant": t,
+            "version": self.version(t),
+            "freq_op_spec": list(spec),
+            "quantized_bits": self.engine.bits,
+            "decay": self.engine.decay,
+        }
+        if self.window is None:
+            payload = row
+        else:
+            payload = {
+                "row": row,
+                "window": list(self.window.tenant_column(self.window_state, t)),
+            }
+            meta.update(
+                window_buckets=self.window.buckets,
+                window_bucket_ticks=self.window.bucket_ticks,
+                window_slot_tick=[int(x) for x in self.window_state.slot_tick],
+                window_head=int(self.window_state.head),
+            )
         ckpt = self._checkpointer(t)
-        ckpt.save(
-            self.version(t),
-            row,
-            meta={
-                "tenant": t,
-                "version": self.version(t),
-                "freq_op_spec": list(spec),
-                "quantized_bits": self.engine.bits,
-                "decay": self.engine.decay,
-            },
-        )
+        ckpt.save(self.version(t), payload, meta=meta)
         self.state = self.engine.reset_tenant(self.state, t)
+        if self.window is not None:
+            self.window_state = self.window.reset_tenant(self.window_state, t)
         self._evicted.add(t)
         self.stats.evictions += 1
         if obs_rt.ENABLED:
@@ -458,14 +599,60 @@ class FleetService:
         tenant's identity, not just its numbers); the state row is restored
         bitwise and the version rewinds to the evicted one, so decodes
         cached before eviction become valid again.
+
+        For a windowed service the checkpoint also carries the tenant's
+        bucket columns: bucket count/ticks are validated against the
+        manifest meta, and a checkpointed column re-enters the ring only if
+        its slot still holds the tick it was saved under — slots the ring
+        has since reclaimed for newer ticks stay untouched (the evicted
+        tenant's bucket there is expired by definition).
         """
         t = int(tenant)
         if t not in self._evicted:
             return
         ckpt = self._checkpointer(t)
-        like = self.engine.tenant_engine(t).init_state()
-        row = ckpt.restore(like)
         meta = ckpt.read_meta()
+        like = self.engine.tenant_engine(t).init_state()
+        has_window = "window_buckets" in meta
+        if has_window != (self.window is not None):
+            raise ValueError(
+                f"tenant {t} checkpoint "
+                + (
+                    f"carries {meta.get('window_buckets')} window buckets "
+                    "but this FleetService is not windowed"
+                    if has_window
+                    else "has no window buckets but this FleetService runs "
+                    f"window_buckets={self.window.buckets}"
+                )
+            )
+        if self.window is None:
+            row = ckpt.restore(like)
+        else:
+            if int(meta["window_buckets"]) != self.window.buckets:
+                raise ValueError(
+                    f"tenant {t} checkpoint was written with "
+                    f"window_buckets={meta['window_buckets']}, service runs "
+                    f"{self.window.buckets}"
+                )
+            if float(meta["window_bucket_ticks"]) != self.window.bucket_ticks:
+                raise ValueError(
+                    f"tenant {t} checkpoint was written with "
+                    f"window_bucket_ticks={meta['window_bucket_ticks']}, "
+                    f"service runs {self.window.bucket_ticks}"
+                )
+            payload = ckpt.restore(
+                {"row": like, "window": [like] * self.window.buckets}
+            )
+            row = payload["row"]
+            column = list(self.window.tenant_column(self.window_state, t))
+            for slot, tick in enumerate(meta["window_slot_tick"]):
+                if int(tick) >= 0 and int(tick) == int(
+                    self.window_state.slot_tick[slot]
+                ):
+                    column[slot] = payload["window"][slot]
+            self.window_state = self.window.set_tenant_column(
+                self.window_state, t, column
+            )
         spec = self.engine.specs[t]
         stored = meta.get("freq_op_spec")
         if stored is not None and spec is not None:

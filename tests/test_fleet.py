@@ -450,3 +450,152 @@ def test_jobspec_fleet_field_validation():
     # Single-tenant specs neither mention the fleet nor hit its validation.
     assert "fleet" not in SketchJobSpec().describe()
     SketchJobSpec(backend="sharded").validate()
+
+
+# -- 5. windowed evict/restore (ISSUE 10 satellite) ----------------------------
+
+
+def _windowed_service(tmp_path, buckets=3, **kw):
+    eng = _make_engine(n_tenants=T)
+    svc = FleetService(
+        eng, _cheap_decode_cfg(), checkpoint_dir=tmp_path,
+        window_buckets=buckets, **kw,
+    )
+    return eng, svc
+
+
+def test_windowed_submit_requires_tick(tmp_path):
+    _, svc = _windowed_service(tmp_path)
+    with pytest.raises(ValueError, match="tick"):
+        svc.submit(0, np.zeros((B, N), np.float32))
+
+
+def test_windowed_evict_restore_roundtrip(tmp_path):
+    """Evict checkpoints the lifetime row AND the W bucket columns; restore
+    brings both back bitwise while the ring has not moved."""
+    eng, svc = _windowed_service(tmp_path)
+    xs = _batches(jax.random.PRNGKey(20), rounds=2)
+    for r in range(2):
+        for t in range(T):
+            svc.submit(t, np.asarray(xs[r, t]), t=float(r))
+        svc.flush()
+    row = eng.tenant_state(svc.state, 1)
+    column = svc.window.tenant_column(svc.window_state, 1)
+    assert any(float(c.weight_sum) > 0 for c in column)
+
+    svc.evict(1)
+    for c in svc.window.tenant_column(svc.window_state, 1):
+        assert float(c.weight_sum) == 0.0  # window hole, like the row
+    svc.restore(1)
+    assert _rows_equal(eng.tenant_state(svc.state, 1), row)
+    for got, want in zip(
+        svc.window.tenant_column(svc.window_state, 1), column
+    ):
+        assert _rows_equal(got, want)
+
+
+def test_windowed_restore_skips_expired_slots(tmp_path):
+    """A checkpointed bucket column only re-enters the ring while its slot
+    still holds the tick it was saved under; slots reclaimed by newer ticks
+    keep their fresh occupants."""
+    eng, svc = _windowed_service(tmp_path, buckets=2)
+    svc.submit(0, np.asarray(_batches(jax.random.PRNGKey(21))[0, 0]), t=0.0)
+    svc.flush()
+    svc.evict(0)  # checkpoint holds tenant 0's slot-0 column at tick 0
+    # tick 2 reclaims slot 0 (2 % W == 0) for tenant 1's fresh bucket
+    svc.submit(1, np.asarray(_batches(jax.random.PRNGKey(22))[0, 1]), t=2.0)
+    svc.flush()
+    fresh = svc.window.tenant_column(svc.window_state, 1)[0]
+
+    svc.restore(0)
+    # tenant 0's expired column stays out of the ring ...
+    assert float(
+        svc.window.tenant_column(svc.window_state, 0)[0].weight_sum
+    ) == 0.0
+    # ... tenant 1's fresh bucket is untouched, and the lifetime row is back
+    assert _rows_equal(svc.window.tenant_column(svc.window_state, 1)[0], fresh)
+    assert float(eng.tenant_state(svc.state, 0).weight_sum) > 0.0
+
+
+def test_windowed_restore_validates_meta(tmp_path):
+    """Bucket count/ticks live in the manifest meta and must match."""
+    _, svc = _windowed_service(tmp_path / "a", buckets=2)
+    svc.submit(0, np.asarray(_batches(jax.random.PRNGKey(23))[0, 0]), t=0.0)
+    svc.flush()
+    svc.evict(0)
+    # same engine family, windowless service -> window/no-window mismatch
+    eng2 = _make_engine(n_tenants=T)
+    svc2 = FleetService(
+        eng2, _cheap_decode_cfg(), checkpoint_dir=tmp_path / "a"
+    )
+    svc2._evicted.add(0)
+    with pytest.raises(ValueError, match="window"):
+        svc2.restore(0)
+    # windowed service with a different bucket count
+    eng3 = _make_engine(n_tenants=T)
+    svc3 = FleetService(
+        eng3, _cheap_decode_cfg(), checkpoint_dir=tmp_path / "a",
+        window_buckets=4,
+    )
+    svc3._evicted.add(0)
+    with pytest.raises(ValueError, match="window_buckets"):
+        svc3.restore(0)
+    # windowless checkpoint into a windowed service
+    _, svc4 = _windowed_service(tmp_path / "b", buckets=2)
+    eng5 = _make_engine(n_tenants=T)
+    svc5 = FleetService(
+        eng5, _cheap_decode_cfg(), checkpoint_dir=tmp_path / "b"
+    )
+    svc5.submit(0, np.asarray(_batches(jax.random.PRNGKey(24))[0, 0]))
+    svc5.flush()
+    svc5.evict(0)
+    svc4._evicted.add(0)
+    with pytest.raises(ValueError, match="not windowed|window"):
+        svc4.restore(0)
+
+
+# -- 6. per-tenant drift thresholds (ISSUE 10 satellite) -----------------------
+
+
+def test_drift_threshold_array_validation():
+    eng = _make_engine()
+    with pytest.raises(ValueError, match="positive"):
+        FleetService(eng, _cheap_decode_cfg(), drift_threshold=-1.0)
+    with pytest.raises(ValueError, match=r"shape \(4,\)"):
+        FleetService(
+            eng, _cheap_decode_cfg(), drift_threshold=np.ones(3)
+        )
+    with pytest.raises(ValueError, match="positive"):
+        FleetService(
+            eng, _cheap_decode_cfg(),
+            drift_threshold=np.array([0.1, -0.1, 0.1, 0.1]),
+        )
+    svc = FleetService(
+        eng, _cheap_decode_cfg(), drift_threshold=np.full(T, 0.5)
+    )
+    assert svc.threshold(2) == 0.5
+    assert FleetService(
+        eng, _cheap_decode_cfg(), drift_threshold=0.25
+    ).threshold(3) == 0.25
+    assert FleetService(eng, _cheap_decode_cfg()).threshold(0) is None
+
+
+def test_per_tenant_drift_redecode():
+    """A hot tenant with a tight bound re-decodes on drifting traffic; a
+    cold tenant with a loose bound keeps serving its cached model."""
+    eng = _make_engine()
+    thresholds = np.full(T, 1e9)
+    thresholds[0] = 1e-12  # hot tenant: any movement re-decodes
+    svc = FleetService(
+        eng, _cheap_decode_cfg(), drift_threshold=thresholds
+    )
+    xs = _batches(jax.random.PRNGKey(30))[0]
+    svc.ingest(range(T), list(np.asarray(xs)))
+    svc.decode(0)
+    svc.decode(1)
+
+    shifted = np.asarray(xs) + 7.0
+    svc.ingest([0, 1], [shifted[0], shifted[1]])  # flush auto-maintains
+    assert svc.stats.drift_redecodes == 1  # tenant 0 only
+    # tenant 0's fresh model is cached at the current version
+    assert svc.decode(0).cached

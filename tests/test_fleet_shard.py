@@ -1,0 +1,432 @@
+"""Multi-device fleet sharding battery (ISSUE 10).
+
+Four pillars:
+
+1. **Mesh parity** — a ``sharding="mesh"`` fleet's update/merge/finalize is
+   bitwise identical per tenant to the unsharded stacked fleet AND to
+   isolated per-tenant ``SketchEngine`` runs, float and quantized, decayed
+   and lifetime.  In-process tests exercise the full mesh code path on a
+   1-device mesh; the real 8-shard placement runs in a subprocess with
+   forced host devices (same pattern as ``tests/test_topology.py``) and
+   additionally asserts the compiled update HLO contains **zero cross-shard
+   collectives** — tenant parallelism is pure data parallelism.
+2. **Shard routing** — :func:`repro.serve.fleet_service.shard_partition`
+   preserves every tenant's arrival order while regrouping requests into
+   contiguous per-shard runs (hypothesis fuzz), and a shard-routed
+   ``FleetService`` stays bitwise equal to isolated engines under random
+   submit/flush/evict/restore interleavings.
+3. **Topology substrate** — ``tenant_mesh`` placement validation and the
+   ``fleet_wire_cost_model`` checkpoint/broadcast byte/hop accounting.
+4. **Launch specs** — ``SketchJobSpec.fleet_kwargs`` / ``service_kwargs``
+   drive the engine and service construction end-to-end.
+
+Run alone with:  pytest -m fleet_shard
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet as fl
+from repro.core import topology as topo
+from repro.core.ckm import CKMConfig
+from repro.core.engine import SketchEngine
+from repro.launch.specs import SketchJobSpec
+from repro.parallel.sharding import tenant_mesh, tenant_shard_specs
+from repro.serve.fleet_service import FleetService, shard_partition
+
+from tests._hypothesis_compat import given, settings, st
+
+pytestmark = pytest.mark.fleet_shard
+
+T, B, N, M = 4, 12, 3, 32
+
+
+def _make_engine(quant="none", n_tenants=T, **kwargs):
+    specs = fl.fleet_specs(jax.random.PRNGKey(0), n_tenants, "dense", M, N, 1.5)
+    quants = fl.fleet_quantizers(jax.random.PRNGKey(7), n_tenants, M, quant)
+    return fl.FleetEngine(specs, quantizers=quants, **kwargs)
+
+
+def _batches(key, rounds=1, n_tenants=T, batch=B):
+    return jax.random.normal(key, (rounds, n_tenants, batch, N))
+
+
+def _rows_equal(row, ref):
+    return all(
+        bool(jnp.array_equal(a, b))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(row), jax.tree_util.tree_leaves(ref)
+        )
+    )
+
+
+def _cheap_decode_cfg():
+    return CKMConfig(
+        k=2, decoder="sketch_shift", shift_candidates=2, shift_steps=3,
+        shift_polish_steps=2, nnls_iters=4,
+    )
+
+
+# -- 1. mesh parity (1-device mesh exercises the full shard_map path) ---------
+
+
+class TestMeshParity:
+    @pytest.mark.parametrize("quant", ["none", "1bit"])
+    def test_update_merge_finalize_parity(self, quant):
+        """mesh(1) fleet == unsharded fleet == isolated engines, bitwise."""
+        ref = _make_engine(quant)
+        eng = _make_engine(quant, sharding="mesh", tenant_shards=1)
+        xs = _batches(jax.random.PRNGKey(1), rounds=2)
+
+        s_ref = ref.merge(
+            ref.update(ref.init_state(), xs[0]),
+            ref.update(ref.init_state(), xs[1]),
+        )
+        s = eng.merge(
+            eng.update(eng.init_state(), xs[0]),
+            eng.update(eng.init_state(), xs[1]),
+        )
+        for t in range(T):
+            assert _rows_equal(
+                eng.tenant_state(s, t), ref.tenant_state(s_ref, t)
+            )
+            e = eng.tenant_engine(t)
+            st_iso = e.merge(
+                e.update(e.init_state(), xs[0, t]),
+                e.update(e.init_state(), xs[1, t]),
+            )
+            assert _rows_equal(eng.tenant_state(s, t), st_iso)
+
+        z, lo, hi = eng.finalize(s)
+        z_r, lo_r, hi_r = ref.finalize(s_ref)
+        assert bool(jnp.array_equal(z, z_r))
+        assert bool(jnp.array_equal(lo, lo_r))
+        assert bool(jnp.array_equal(hi, hi_r))
+
+    def test_decayed_mesh_parity(self):
+        """Time-decayed updates agree bitwise through the mesh path."""
+        ref = _make_engine(decay=0.9)
+        eng = _make_engine(decay=0.9, sharding="mesh", tenant_shards=1)
+        xs = _batches(jax.random.PRNGKey(2), rounds=3)
+        s_ref, s = ref.init_state(), eng.init_state()
+        for r, t_tick in enumerate([0.0, 1.5, 4.0]):
+            s_ref = ref.update(s_ref, xs[r], t=t_tick)
+            s = eng.update(s, xs[r], t=t_tick)
+        for t in range(T):
+            assert _rows_equal(eng.tenant_state(s, t), ref.tenant_state(s_ref, t))
+        z, _, _ = eng.finalize(s)
+        z_r, _, _ = ref.finalize(s_ref)
+        assert bool(jnp.array_equal(z, z_r))
+
+    def test_ingest_and_surgery_on_sharded_state(self):
+        """Segment-scatter ingest + tenant surgery work on placed state and
+        keep it bitwise equal to the unsharded fleet."""
+        ref = _make_engine()
+        eng = _make_engine(sharding="mesh", tenant_shards=1)
+        s_ref, s = ref.init_state(), eng.init_state()
+        ids = np.array([2, 0, 2, 1])
+        xs = jax.random.normal(jax.random.PRNGKey(3), (4, B, N))
+        s_ref = ref.ingest(s_ref, ids, xs)
+        s = eng.ingest(s, ids, xs)
+        row = eng.tenant_state(s, 2)
+        s = eng.reset_tenant(s, 2)
+        assert float(eng.tenant_state(s, 2).weight_sum) == 0.0
+        s = eng.set_tenant(s, 2, row)
+        for t in range(T):
+            assert _rows_equal(eng.tenant_state(s, t), ref.tenant_state(s_ref, t))
+
+    def test_hlo_has_no_collectives(self):
+        """The compiled sharded update is embarrassingly parallel: no
+        all-reduce / all-gather / permute / all-to-all in the hot path."""
+        eng = _make_engine(sharding="mesh", tenant_shards=1)
+        xs = _batches(jax.random.PRNGKey(4))[0]
+        hlo = eng.mesh_update_hlo(eng.init_state(), xs).lower()
+        for op in ("all-reduce", "all-gather", "collective-permute", "all-to-all"):
+            assert op not in hlo, op
+
+    def test_owner_shard_and_rows(self):
+        eng = _make_engine(n_tenants=8, sharding="mesh", tenant_shards=1)
+        assert eng.shard_rows == 8
+        assert eng.owner_shard(7) == 0
+        with pytest.raises(ValueError):
+            eng.owner_shard(8)
+        with pytest.raises(ValueError):
+            eng.owner_shard(-1)
+        assert "shards=1x8rows" in repr(eng)
+
+
+class TestMeshConfigErrors:
+    def test_unknown_sharding(self):
+        with pytest.raises(ValueError, match="sharding"):
+            _make_engine(sharding="grid")
+
+    def test_mesh_requires_mesh_sharding(self):
+        with pytest.raises(ValueError, match="mesh"):
+            _make_engine(mesh=tenant_mesh(1))
+        with pytest.raises(ValueError, match="mesh"):
+            _make_engine(tenant_shards=2)
+
+    def test_shard_extent_validated_against_mesh_and_devices(self):
+        # tenant_shards must match the mesh axis extent ...
+        with pytest.raises(ValueError, match="axis has 1 device"):
+            _make_engine(sharding="mesh", mesh=tenant_mesh(1), tenant_shards=2)
+        # ... and tenant_mesh refuses extents beyond the device count, with
+        # the XLA_FLAGS escape hatch in the message (the n_tenants % shards
+        # divisibility check itself runs in the 8-device subprocess test).
+        with pytest.raises(ValueError, match="XLA_FLAGS"):
+            _make_engine(sharding="mesh", tenant_shards=99)
+
+    def test_axis_must_be_in_mesh(self):
+        mesh = tenant_mesh(1, axis="rows")
+        with pytest.raises(ValueError, match="axis"):
+            _make_engine(sharding="mesh", mesh=mesh, tenant_shard_axis="tenant")
+        eng = _make_engine(sharding="mesh", mesh=mesh, tenant_shard_axis="rows")
+        assert eng.tenant_shard_axis == "rows"
+
+
+# -- 2. shard routing ---------------------------------------------------------
+
+
+class TestShardPartition:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tenants=st.lists(st.integers(0, 15), min_size=0, max_size=40),
+        n_shards=st.integers(1, 4),
+    )
+    def test_partition_preserves_per_tenant_order(self, tenants, n_shards):
+        rows = 16 // n_shards if 16 % n_shards == 0 else None
+        owner = (lambda t: t * n_shards // 16)
+        pending = [(t, f"req{i}", None) for i, t in enumerate(tenants)]
+        ordered, buckets = shard_partition(pending, owner, n_shards)
+        # nothing lost, nothing duplicated
+        assert sorted(map(id, ordered)) == sorted(map(id, pending))
+        # per-tenant subsequences are untouched
+        for t in set(tenants):
+            assert [r for r in ordered if r[0] == t] == [
+                r for r in pending if r[0] == t
+            ]
+        # bucket membership is by owner, buckets concatenate to the order
+        for s, bucket in enumerate(buckets):
+            assert all(owner(r[0]) == s for r in bucket)
+        assert [r for b in buckets for r in b] == ordered
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        ops=st.lists(st.integers(0, 99), min_size=1, max_size=30),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_mesh_service_interleavings_match_isolated(self, ops, seed):
+        """Random submit/flush/evict/restore/decode interleavings on a
+        mesh(1)-sharded service leave every tenant bitwise equal to an
+        isolated SketchEngine fold of its own requests."""
+        rng = np.random.default_rng(seed)
+        eng = _make_engine(sharding="mesh", tenant_shards=1)
+        iso = [SketchEngine(eng.operator(t)) for t in range(T)]
+        iso_states = [e.init_state() for e in iso]
+        with tempfile.TemporaryDirectory() as d:
+            svc = FleetService(eng, _cheap_decode_cfg(), checkpoint_dir=d)
+            for op in ops:
+                t = op % T
+                kind = (op // T) % 4
+                if kind == 0 or kind == 1:  # submit (weighted toward folds)
+                    x = rng.normal(size=(B, N)).astype(np.float32)
+                    svc.submit(t, x)
+                    iso_states[t] = iso[t].update(iso_states[t], jnp.asarray(x))
+                elif kind == 2:
+                    svc.flush()
+                else:
+                    svc.flush()  # evict folds pending state first
+                    svc.evict(t)
+            svc.flush()
+            for t in range(T):
+                if t in svc.evicted:
+                    svc.restore(t)
+                assert _rows_equal(
+                    eng.tenant_state(svc.state, t), iso_states[t]
+                ), t
+
+
+# -- 3. topology substrate ----------------------------------------------------
+
+
+class TestTopologySubstrate:
+    def test_tenant_mesh_validation(self):
+        mesh = tenant_mesh(1)
+        assert mesh.axis_names == ("tenant",)
+        assert mesh.shape["tenant"] == 1
+        with pytest.raises(ValueError, match="XLA_FLAGS"):
+            tenant_mesh(max(9, len(jax.devices()) + 1))
+        with pytest.raises(ValueError):
+            tenant_mesh(0)
+
+    def test_tenant_shard_specs(self):
+        P = jax.sharding.PartitionSpec
+        specs = tenant_shard_specs({"a": 1, "b": (2, 3)})
+        assert specs == {"a": P("tenant"), "b": (P("tenant"), P("tenant"))}
+
+    def test_fleet_wire_cost_model(self):
+        m = topo.fleet_wire_cost_model(1024, 64, 8, "tree")
+        assert m["rows_per_shard"] == 8
+        assert m["shard_state_bytes"] == 8 * 1024
+        assert m["steady_state_bytes"] == 0  # zero-collective hot path
+        assert m["checkpoint_bytes"] == 1024  # one row, owner -> host
+        assert m["broadcast_hops"] == 3  # log2(8) rounds tree fan-out
+        assert topo.fleet_wire_cost_model(1024, 64, 8, "ring")["broadcast_hops"] == 7
+        solo = topo.fleet_wire_cost_model(1024, 64, 1)
+        assert solo["broadcast_hops"] == 0
+        assert solo["broadcast_bytes_total"] == 0
+        with pytest.raises(ValueError, match="multiple"):
+            topo.fleet_wire_cost_model(1024, 6, 4)
+        with pytest.raises(ValueError):
+            topo.fleet_wire_cost_model(1024, 8, 0)
+
+
+# -- 4. launch specs ----------------------------------------------------------
+
+
+class TestJobSpecFleetKwargs:
+    def test_fleet_kwargs_unsharded(self):
+        kw = SketchJobSpec(n_tenants=8).fleet_kwargs()
+        assert kw == {"backend": "xla", "decay": None}
+
+    def test_fleet_kwargs_sharded_drive_engine(self):
+        job = SketchJobSpec(n_tenants=8, tenant_shards=1, decay=0.8)
+        kw = job.fleet_kwargs()
+        assert "sharding" not in kw  # shards=1 -> plain placement
+        job = dataclasses.replace(job, tenant_shards=8)
+        kw = job.fleet_kwargs()
+        assert kw["sharding"] == "mesh"
+        assert kw["tenant_shards"] == 8
+        assert kw["tenant_shard_axis"] == "tenant"
+
+    def test_service_kwargs_drive_service(self):
+        job = SketchJobSpec(
+            n_tenants=T, decode_cache_entries=7, drift_threshold=0.5,
+            window_buckets=3, window_bucket_ticks=2.0,
+        )
+        svc = FleetService(
+            _make_engine(), _cheap_decode_cfg(), **job.service_kwargs()
+        )
+        assert svc.decode_cache_entries == 7
+        assert svc.threshold(0) == 0.5
+        assert svc.window.buckets == 3
+        assert svc.window.bucket_ticks == 2.0
+
+    def test_indivisible_shards_rejected(self):
+        with pytest.raises(ValueError, match="divisible"):
+            SketchJobSpec(n_tenants=6, tenant_shards=4).validate()
+        with pytest.raises(ValueError):
+            SketchJobSpec(tenant_shards=0).validate()
+
+
+# -- 5. real multi-device placement (subprocess, 8 forced host devices) -------
+
+
+class TestMultiDevice:
+    def test_8_shard_parity_and_zero_collectives(self):
+        """8 host devices: the sharded fleet (engine AND shard-routed
+        service) is bitwise equal per tenant to the unsharded stacked fleet
+        and to isolated engines, float + quantized, and the compiled update
+        HLO contains zero cross-shard collectives."""
+        prog = textwrap.dedent(
+            """
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import jax, numpy as np
+            import jax.numpy as jnp
+            from repro.core import fleet as fl
+            from repro.core.ckm import CKMConfig
+            from repro.core.engine import SketchEngine
+            from repro.launch.specs import SketchJobSpec
+            from repro.serve.fleet_service import FleetService
+
+            T, B, N, M = 16, 8, 3, 32
+            assert len(jax.devices()) == 8
+
+            def rows_equal(a, b):
+                return all(bool(jnp.array_equal(x, y)) for x, y in zip(
+                    jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+            for quant in ("none", "1bit"):
+                specs = fl.fleet_specs(jax.random.PRNGKey(0), T, "dense", M, N, 1.5)
+                quants = fl.fleet_quantizers(jax.random.PRNGKey(7), T, M, quant)
+                ref = fl.FleetEngine(specs, quantizers=quants)
+                kw = SketchJobSpec(n_tenants=T, tenant_shards=8).fleet_kwargs()
+                eng = fl.FleetEngine(specs, quantizers=quants, **kw)
+                assert eng.tenant_shards == 8 and eng.shard_rows == 2
+                assert eng.owner_shard(15) == 7
+
+                xs = jax.random.normal(jax.random.PRNGKey(1), (2, T, B, N))
+                s_ref = ref.merge(ref.update(ref.init_state(), xs[0]),
+                                  ref.update(ref.init_state(), xs[1]))
+                s = eng.merge(eng.update(eng.init_state(), xs[0]),
+                              eng.update(eng.init_state(), xs[1]))
+
+                hlo = eng.mesh_update_hlo(eng.init_state(), xs[0]).lower()
+                for op in ("all-reduce", "all-gather", "collective-permute",
+                           "all-to-all"):
+                    assert op not in hlo, (quant, op)
+
+                for t in range(T):
+                    assert rows_equal(eng.tenant_state(s, t),
+                                      ref.tenant_state(s_ref, t)), (quant, t)
+                    e = eng.tenant_engine(t)
+                    iso = e.merge(e.update(e.init_state(), xs[0, t]),
+                                  e.update(e.init_state(), xs[1, t]))
+                    assert rows_equal(eng.tenant_state(s, t), iso), (quant, t)
+                zf, lof, hif = eng.finalize(s)
+                zr, lor, hir = ref.finalize(s_ref)
+                assert bool(jnp.array_equal(zf, zr)), quant
+                assert bool(jnp.array_equal(lof, lor)) and bool(
+                    jnp.array_equal(hif, hir)), quant
+
+            # the divisibility guard needs real multi-shard meshes to fire
+            bad = fl.fleet_specs(jax.random.PRNGKey(0), 15, "dense", M, N, 1.5)
+            try:
+                fl.FleetEngine(bad, sharding="mesh", tenant_shards=8)
+            except ValueError as err:
+                assert "divisible" in str(err), err
+            else:
+                raise AssertionError("indivisible shard extent accepted")
+
+            # service level: shard-routed flush == isolated engines, bitwise
+            specs = fl.fleet_specs(jax.random.PRNGKey(0), T, "dense", M, N, 1.5)
+            eng = fl.FleetEngine(specs, sharding="mesh", tenant_shards=8)
+            cfg = CKMConfig(k=2, decoder="sketch_shift", shift_candidates=2,
+                            shift_steps=3, shift_polish_steps=2, nnls_iters=4)
+            svc = FleetService(eng, cfg)
+            iso = [SketchEngine(eng.operator(t)) for t in range(T)]
+            iso_states = [e.init_state() for e in iso]
+            rng = np.random.default_rng(3)
+            for _ in range(60):
+                t = int(rng.integers(T))
+                x = rng.normal(size=(B, N)).astype(np.float32)
+                svc.submit(t, x)
+                iso_states[t] = iso[t].update(iso_states[t], jnp.asarray(x))
+                if rng.integers(4) == 0:
+                    svc.flush()
+            svc.flush()
+            for t in range(T):
+                assert rows_equal(eng.tenant_state(svc.state, t),
+                                  iso_states[t]), t
+            print("OK")
+            """
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run(
+            [sys.executable, "-c", prog], env=env, capture_output=True,
+            text=True, timeout=600,
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "OK" in out.stdout
